@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: datasets, timing, CSV emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import PCDNConfig, cdn_config, make_problem, solve
+from repro.data import paper_like
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+os.makedirs(RESULTS_DIR, exist_ok=True)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def save_json(name: str, payload: Dict) -> None:
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as fh:
+        json.dump(payload, fh, indent=1, default=float)
+
+
+def dataset(name: str, seed: int = 0, with_test: bool = False):
+    return paper_like(name, seed=seed, with_test=with_test)
+
+
+def f_star_for(problem, seed: int = 0) -> float:
+    """Tight optimum via long PCDN run (paper uses CDN at eps=1e-8)."""
+    res = solve(problem, PCDNConfig(P=min(problem.n_features, 512),
+                                    max_outer=400, tol_kkt=1e-6, seed=seed))
+    return res.objective
+
+
+def time_to_accuracy(problem, cfg: PCDNConfig, f_star: float,
+                     eps: float, max_outer: int = 300):
+    """-> (seconds, outer_iters, converged)."""
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, max_outer=max_outer, tol_kkt=0.0,
+                               tol_rel_obj=eps)
+    t0 = time.perf_counter()
+    res = solve(problem, cfg2, f_star=f_star)
+    return time.perf_counter() - t0, res.n_outer, res.converged

@@ -1,0 +1,41 @@
+"""Figure 2: training time vs bundle size P (real-sim, both losses),
+locating the optimal P*. Also exercises Eq. 20's trade-off: larger P =>
+fewer outer iterations but more line-search steps per iteration."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, f_star_for, save_json
+from repro.core import PCDNConfig, make_problem, solve
+
+
+def run(quick: bool = True):
+    X, y, spec = dataset("real-sim")
+    out = {}
+    for loss, c in (("logistic", spec.c_logistic),
+                    ("squared_hinge", spec.c_svm)):
+        prob = make_problem(X, y, c=c, loss=loss)
+        f_star = f_star_for(prob)
+        n = prob.n_features
+        Ps = sorted({8, 64, 256, 1024, n})
+        rows = []
+        for P in Ps:
+            t0 = time.perf_counter()
+            res = solve(prob, PCDNConfig(P=P, max_outer=200, tol_kkt=0.0,
+                                         tol_rel_obj=1e-3), f_star=f_star)
+            dt = time.perf_counter() - t0
+            rows.append({"P": P, "seconds": dt, "outer": res.n_outer,
+                         "mean_ls_steps": float(res.history.ls_steps.mean()),
+                         "converged": res.converged})
+        best = min(rows, key=lambda r: r["seconds"])
+        out[loss] = {"rows": rows, "P_star": best["P"]}
+        emit(f"fig2/real-sim/{loss}", best["seconds"] * 1e6,
+             f"P*={best['P']} t={best['seconds']:.2f}s")
+    save_json("fig2_time_vs_P", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Figure 3: L2-loss-SVM runtime comparison — PCDN vs CDN vs TRON across
+dataset profiles and stopping accuracies (markers-above-diagonal plot in
+the paper; we report the runtime ratios)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, f_star_for, save_json
+from repro.core import PCDNConfig, cdn_config, make_problem, solve, tron
+
+
+def run(quick: bool = True):
+    out = {}
+    epss = [1e-2, 1e-3] if quick else [1e-2, 1e-3, 1e-4]
+    for ds_name in ("a9a", "real-sim", "news20"):
+        X, y, spec = dataset(ds_name)
+        if quick and ds_name == "news20":
+            # CDN at P=1 over 16k features is minutes/outer on 1 CPU core;
+            # quick mode trims the feature count (profile is preserved)
+            X = X[:, :4096]
+        prob = make_problem(X, y, c=spec.c_svm, loss="squared_hinge")
+        f_star = f_star_for(prob)
+        n = prob.n_features
+        P = max(min(n // 4, 512), 8)
+        rows = []
+        for eps in epss:
+            def timed(make_res):
+                t0 = time.perf_counter()
+                r = make_res()
+                return time.perf_counter() - t0, r
+
+            t_pcdn, _ = timed(lambda: solve(
+                prob, PCDNConfig(P=P, max_outer=300, tol_kkt=0.0,
+                                 tol_rel_obj=eps), f_star=f_star))
+            t_cdn, _ = timed(lambda: solve(
+                prob, cdn_config(max_outer=300, tol_kkt=0.0,
+                                 tol_rel_obj=eps), f_star=f_star))
+            t_tron, _ = timed(lambda: tron.solve(
+                prob, tron.TRONConfig(max_outer=200, tol_kkt=eps)))
+            rows.append({"eps": eps, "pcdn_s": t_pcdn, "cdn_s": t_cdn,
+                         "tron_s": t_tron})
+        out[ds_name] = rows
+        last = rows[-1]
+        emit(f"fig3/{ds_name}", last["pcdn_s"] * 1e6,
+             f"speedup_vs_cdn={last['cdn_s'] / last['pcdn_s']:.2f} "
+             f"vs_tron={last['tron_s'] / last['pcdn_s']:.2f}")
+    save_json("fig3_svm_runtime", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Roofline report: aggregates the dry-run JSONs into the EXPERIMENTS.md
+section-Roofline table (per arch x shape x mesh: three terms, bottleneck,
+useful-flops ratio, memory fit)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_json
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+HBM_PER_CHIP = 16e9  # v5e-class
+
+
+def load_all():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def markdown_table(rows, multi_pod=False):
+    lines = [
+        "| arch | cell | comp (s) | mem (s) | coll (s) | bottleneck | "
+        "useful | MFU bound | bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("multi_pod") != multi_pod:
+            continue
+        if r["status"] == "SKIP":
+            lines.append(f"| {r['arch']} | {r['cell']} | — | — | — | "
+                         f"SKIP | — | — | {r['reason'][:40]}… |")
+            continue
+        if r["status"] != "OK":
+            lines.append(f"| {r['arch']} | {r['cell']} | — | — | — | "
+                         f"FAIL | — | — | — |")
+            continue
+        rf = r["roofline"]
+        mem_dev = r["memory"]["bytes_per_device"]
+        fit = "✓" if mem_dev <= HBM_PER_CHIP else "✗"
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {rf['t_compute_s']:.3f} | "
+            f"{rf['t_memory_s']:.3f} | {rf['t_collective_s']:.3f} | "
+            f"{rf['bottleneck']} | {rf['useful_flops_ratio']:.2f} | "
+            f"{rf['mfu_bound']:.2f} | {mem_dev / 1e9:.1f}GB {fit} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True):
+    rows = load_all()
+    ok = [r for r in rows if r["status"] == "OK"]
+    fail = [r for r in rows if r["status"] == "FAIL"]
+    skip = [r for r in rows if r["status"] == "SKIP"]
+    emit("roofline/cells", 0.0,
+         f"ok={len(ok)} fail={len(fail)} skip={len(skip)}")
+    by_bott = {}
+    for r in ok:
+        b = r["roofline"]["bottleneck"]
+        by_bott[b] = by_bott.get(b, 0) + 1
+    emit("roofline/bottlenecks", 0.0, str(by_bott))
+    md = {"single_pod": markdown_table(rows, False),
+          "multi_pod": markdown_table(rows, True)}
+    save_json("roofline_summary", {
+        "counts": {"ok": len(ok), "fail": len(fail), "skip": len(skip)},
+        "bottlenecks": by_bott,
+    })
+    with open(os.path.join(os.path.dirname(__file__), "results",
+                           "roofline_tables.md"), "w") as fh:
+        fh.write("## Single-pod (16x16 = 256 chips)\n\n")
+        fh.write(md["single_pod"])
+        fh.write("\n\n## Multi-pod (2x16x16 = 512 chips)\n\n")
+        fh.write(md["multi_pod"])
+        fh.write("\n")
+    return md
+
+
+if __name__ == "__main__":
+    run()

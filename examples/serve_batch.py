@@ -1,0 +1,24 @@
+"""Batched serving example: prefill a batch of prompts and decode greedily
+from the KV cache (incremental decode == full forward, tested invariant).
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch falcon-mamba-7b]
+
+Try an SSM arch to see O(1)-state decode, or a dense arch for KV caching.
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="falcon-mamba-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args(argv)
+    serve_main(["--arch", args.arch, "--batch", str(args.batch),
+                "--new-tokens", str(args.new_tokens)])
+
+
+if __name__ == "__main__":
+    main()

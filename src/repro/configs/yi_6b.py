@@ -1,0 +1,22 @@
+"""yi-6b [dense]: llama-architecture GQA. [arXiv:2403.04652; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64_000,
+    mlp_type="swiglu",
+    rope_theta=5_000_000.0,
+)
+
+REDUCED = CONFIG.replace(
+    name="yi-6b-reduced",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, dtype="float32", remat=False,
+)

@@ -1,0 +1,11 @@
+"""Core: the paper's primary contribution — PCDN and its comparison solvers."""
+from repro.core.linesearch import ArmijoParams
+from repro.core.problem import (L1Problem, expected_max_column_norm,
+                                make_problem)
+from repro.core.pcdn import PCDNConfig, SolveResult, cdn_config, solve
+from repro.core import scdn, tron
+
+__all__ = [
+    "ArmijoParams", "L1Problem", "make_problem", "expected_max_column_norm",
+    "PCDNConfig", "SolveResult", "cdn_config", "solve", "scdn", "tron",
+]

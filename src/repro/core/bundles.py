@@ -1,0 +1,54 @@
+"""Random Gauss-Seidel bundle partitioning (paper Eq. 8).
+
+Each outer iteration draws a fresh random permutation of the feature set N
+and slices it into b = ceil(n / P) disjoint bundles of size P. When P does
+not divide n the final bundle is padded with sentinel indices (== n); all
+bundle math masks them out, so semantics match the paper's ragged last
+bundle exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def num_bundles(n: int, P: int) -> int:
+    return -(-n // P)  # ceil
+
+
+def partition(key: Array, n: int, P: int) -> Array:
+    """-> (b, P) int32 bundle indices; entries == n are padding."""
+    b = num_bundles(n, P)
+    perm = jax.random.permutation(key, n)
+    pad = jnp.full((b * P - n,), n, dtype=perm.dtype)
+    return jnp.concatenate([perm, pad]).reshape(b, P).astype(jnp.int32)
+
+
+def gather_slab(X: Array, idx: Array) -> tuple[Array, Array]:
+    """Gather the dense (s, P) column slab for one bundle.
+
+    idx: (P,) with possible sentinel n. Returns (XB, valid_mask) where
+    padded columns are zeroed so they contribute nothing to any reduction.
+    """
+    n = X.shape[1]
+    valid = idx < n
+    safe = jnp.minimum(idx, n - 1)
+    XB = jnp.take(X, safe, axis=1)
+    XB = XB * valid[None, :].astype(X.dtype)
+    return XB, valid
+
+
+def gather_vec(v: Array, idx: Array) -> tuple[Array, Array]:
+    """Gather (P,) entries of a feature-indexed vector with pad masking."""
+    n = v.shape[0]
+    valid = idx < n
+    safe = jnp.minimum(idx, n - 1)
+    out = jnp.take(v, safe) * valid.astype(v.dtype)
+    return out, valid
+
+
+def scatter_add(w: Array, idx: Array, upd: Array) -> Array:
+    """w[idx] += upd with sentinel-safe drop semantics."""
+    return w.at[idx].add(upd, mode="drop")

@@ -1,0 +1,48 @@
+"""One-dimensional Newton direction for the l1 subproblem (paper Eq. 4/5).
+
+    d(w; j) = argmin_d  g d + (1/2) h d^2 + |w_j + d|
+
+with g = grad_j L(w), h = hess_jj L(w) > 0. Closed form (Eq. 5):
+
+    d = -(g + 1)/h   if g + 1 <= h w_j
+    d = -(g - 1)/h   if g - 1 >= h w_j
+    d = -w_j         otherwise
+
+Vectorized over a bundle; this is exactly what kernels/pcdn_direction
+computes in its epilogue on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def newton_direction(g: Array, h: Array, w: Array) -> Array:
+    """Eq. 5, elementwise over a bundle. g, h, w: (P,) -> d: (P,)."""
+    d_neg = -(g + 1.0) / h  # active when subgradient wants w to move up
+    d_pos = -(g - 1.0) / h
+    return jnp.where(
+        g + 1.0 <= h * w,
+        d_neg,
+        jnp.where(g - 1.0 >= h * w, d_pos, -w),
+    )
+
+
+def delta_decrement(g: Array, h: Array, w: Array, d: Array,
+                    gamma: float) -> Array:
+    """Armijo decrement Delta (paper Eq. 7), restricted to the bundle.
+
+    Delta = g.d + gamma d^T H d + ||w+d||_1 - ||w||_1
+    (coordinates outside the bundle contribute nothing since d=0 there).
+    """
+    quad = jnp.sum(h * jnp.square(d))
+    lin = jnp.sum(g * d)
+    l1 = jnp.sum(jnp.abs(w + d)) - jnp.sum(jnp.abs(w))
+    return lin + gamma * quad + l1
+
+
+def delta_upper_bound(h: Array, d: Array, gamma: float) -> Array:
+    """Lemma 1(c) Eq. 16 upper bound: (gamma - 1) d^T H d  (<= 0)."""
+    return (gamma - 1.0) * jnp.sum(h * jnp.square(d))

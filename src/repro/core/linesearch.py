@@ -1,0 +1,149 @@
+"""P-dimensional Armijo line search (paper Eq. 6/11, Algorithm 4).
+
+Accept the largest alpha = beta^q, q = 0, 1, 2, ... with
+
+    F_c(w + alpha d) - F_c(w) <= sigma * alpha * Delta            (Eq. 6)
+
+evaluated through the per-sample intermediates (section 3.1):
+    z     = X w                     (maintained across iterations)
+    delta = X d = X_B d_B           (one matvec per bundle)
+
+    F_c(w + a d) - F_c(w)
+      = c * sum_i [phi(z_i + a delta_i) - phi(z_i)] + ||w + a d||_1 - ||w||_1
+
+so no pass over X is needed inside the backtracking loop — the exact
+analogue of Algorithm 4's e^{w.x} / d.x bookkeeping, in stable z-space.
+
+Two variants (DESIGN.md section 3.2):
+
+  * `armijo_backtracking`   — faithful sequential loop (lax.while_loop),
+    identical to Algorithm 4. This is the paper-faithful baseline.
+  * `armijo_batched`        — TPU-native: evaluates all Q candidates
+    beta^0..beta^{Q-1} in one vectorized pass and selects the first
+    satisfying candidate. Same accepted alpha (tested), no sequential
+    dependence; this is what kernels/pcdn_linesearch implements.
+
+Both return (alpha, n_steps, accepted) where n_steps is q+1 (paper's q^t
+counts evaluations) and accepted=False means even the smallest candidate
+failed (alpha=0 returned; cannot happen in theory per Thm 2, but guards
+float underflow).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import Loss
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ArmijoParams:
+    """Paper section 5.1: sigma=0.01, gamma=0, beta=0.5 for all solvers."""
+
+    beta: float = 0.5
+    sigma: float = 0.01
+    gamma: float = 0.0
+    max_steps: int = 40  # beta^40 ~ 1e-12: below this alpha is numerically 0
+
+
+class LineSearchResult(NamedTuple):
+    alpha: Array      # scalar, accepted step size (0.0 if not accepted)
+    n_steps: Array    # int32, number of candidates evaluated (q + 1)
+    accepted: Array   # bool
+
+
+def objective_delta(loss: Loss, c: float, z: Array, delta: Array, y: Array,
+                    w_B: Array, d_B: Array, alpha: Array,
+                    l2: float = 0.0) -> Array:
+    """F_c(w + alpha d) - F_c(w) through intermediates. alpha: scalar.
+    `l2` adds the elastic-net quadratic (l2/2)(||w+ad||^2 - ||w||^2) on
+    the bundle coordinates (d = 0 elsewhere)."""
+    lo = c * jnp.sum(loss.value(z + alpha * delta, y) - loss.value(z, y))
+    l1 = jnp.sum(jnp.abs(w_B + alpha * d_B)) - jnp.sum(jnp.abs(w_B))
+    out = lo + l1
+    if l2:
+        out = out + 0.5 * l2 * (jnp.sum(jnp.square(w_B + alpha * d_B)) -
+                                jnp.sum(jnp.square(w_B)))
+    return out
+
+
+def objective_delta_batched(loss: Loss, c: float, z: Array, delta: Array,
+                            y: Array, w_B: Array, d_B: Array,
+                            alphas: Array, l2: float = 0.0) -> Array:
+    """Vectorized over a (Q,) vector of candidate alphas -> (Q,) deltas.
+
+    Loss part broadcasts (Q, 1) x (s,) -> (Q, s); reduced over samples.
+    For very large s callers should chunk (the sharded solver reduces the
+    (Q,) partials with a single psum — DESIGN.md section 3.4).
+    """
+    zq = z[None, :] + alphas[:, None] * delta[None, :]
+    lo = c * jnp.sum(loss.value(zq, y[None, :]) - loss.value(z, y)[None, :],
+                     axis=-1)
+    wq = w_B[None, :] + alphas[:, None] * d_B[None, :]
+    l1 = jnp.sum(jnp.abs(wq), axis=-1) - jnp.sum(jnp.abs(w_B))
+    out = lo + l1
+    if l2:
+        out = out + 0.5 * l2 * (jnp.sum(jnp.square(wq), axis=-1) -
+                                jnp.sum(jnp.square(w_B)))
+    return out
+
+
+def armijo_backtracking(loss: Loss, c: float, z: Array, delta: Array,
+                        y: Array, w_B: Array, d_B: Array, Delta: Array,
+                        params: ArmijoParams,
+                        l2: float = 0.0) -> LineSearchResult:
+    """Faithful Algorithm 4: try alpha = 1, beta, beta^2, ... sequentially."""
+    sigma = params.sigma
+    beta = params.beta
+
+    def cond(state):
+        q, alpha, done = state
+        return jnp.logical_and(~done, q < params.max_steps)
+
+    def body(state):
+        q, alpha, _ = state
+        f_delta = objective_delta(loss, c, z, delta, y, w_B, d_B, alpha, l2)
+        ok = f_delta <= sigma * alpha * Delta
+        next_alpha = jnp.where(ok, alpha, alpha * beta)
+        return q + 1, next_alpha, ok
+
+    q, alpha, ok = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.asarray(1.0, z.dtype),
+                     jnp.asarray(False)))
+    alpha = jnp.where(ok, alpha, 0.0)
+    return LineSearchResult(alpha=alpha, n_steps=q, accepted=ok)
+
+
+def candidate_alphas(params: ArmijoParams, dtype=jnp.float32) -> Array:
+    """beta^0 .. beta^{max_steps-1}."""
+    q = jnp.arange(params.max_steps, dtype=dtype)
+    return jnp.power(jnp.asarray(params.beta, dtype), q)
+
+
+def select_first_satisfying(f_deltas: Array, alphas: Array,
+                            Delta: Array, sigma: float) -> LineSearchResult:
+    """Given per-candidate objective deltas, pick the first Armijo-accepted
+    alpha (largest candidate). Shared by the jnp path and the Pallas kernel
+    wrapper."""
+    ok = f_deltas <= sigma * alphas * Delta
+    any_ok = jnp.any(ok)
+    first = jnp.argmax(ok)  # first True (argmax returns lowest index)
+    alpha = jnp.where(any_ok, alphas[first], 0.0)
+    return LineSearchResult(alpha=alpha,
+                            n_steps=jnp.asarray(first + 1, jnp.int32),
+                            accepted=any_ok)
+
+
+def armijo_batched(loss: Loss, c: float, z: Array, delta: Array, y: Array,
+                   w_B: Array, d_B: Array, Delta: Array,
+                   params: ArmijoParams, l2: float = 0.0) -> LineSearchResult:
+    """TPU-native variant: one vectorized pass over all candidates."""
+    alphas = candidate_alphas(params, z.dtype)
+    f_deltas = objective_delta_batched(loss, c, z, delta, y, w_B, d_B,
+                                       alphas, l2)
+    return select_first_satisfying(f_deltas, alphas, Delta, params.sigma)

@@ -1,0 +1,175 @@
+"""l1-regularized ERM problem container (paper Eq. 1).
+
+    min_w  F_c(w) = c * sum_i phi(w . x_i, y_i) + ||w||_1
+
+Holds the design matrix X (s, n), labels y (s,), regularization c and the
+loss. All solver math is phrased through the per-sample margin z = X @ w,
+the intermediate quantity of paper section 3.1.
+
+`elastic_net_l2` adds an optional (lambda2/2)||w||^2 smooth term (paper
+section 6 extension); it folds into the gradient/Hessian diagonals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import HESSIAN_FLOOR, Loss, get_loss
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class L1Problem:
+    """Dense l1-regularized problem. X: (s, n) float, y: (s,) float (+-1)."""
+
+    X: Array
+    y: Array
+    c: float
+    loss_name: str = "logistic"
+    elastic_net_l2: float = 0.0
+
+    # -- pytree plumbing (X, y are leaves; scalars are static aux) ----------
+    def tree_flatten(self):
+        return (self.X, self.y), (self.c, self.loss_name, self.elastic_net_l2)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        X, y = children
+        c, loss_name, l2 = aux
+        return cls(X=X, y=y, c=c, loss_name=loss_name, elastic_net_l2=l2)
+
+    # -- basic accessors -----------------------------------------------------
+    @property
+    def loss(self) -> Loss:
+        return get_loss(self.loss_name)
+
+    @property
+    def n_samples(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.X.shape[1]
+
+    # -- objective -----------------------------------------------------------
+    def margins(self, w: Array) -> Array:
+        return self.X @ w
+
+    def objective_from_margins(self, z: Array, w: Array) -> Array:
+        f = self.loss.margin_objective(z, self.y, self.c) + jnp.sum(jnp.abs(w))
+        if self.elastic_net_l2:
+            f = f + 0.5 * self.elastic_net_l2 * jnp.sum(jnp.square(w))
+        return f
+
+    def objective(self, w: Array) -> Array:
+        return self.objective_from_margins(self.margins(w), w)
+
+    # -- per-sample factors used by every solver ------------------------------
+    def grad_factor(self, z: Array) -> Array:
+        """u_i = c * dphi/dz_i ; grad_j L = sum_i u_i x_ij = X[:,j] . u."""
+        return self.c * self.loss.dz(z, self.y)
+
+    def hess_factor(self, z: Array) -> Array:
+        """v_i = c * d2phi/dz2_i ; hess_jj L = sum_i v_i x_ij^2."""
+        return self.c * self.loss.d2z(z, self.y)
+
+    def bundle_grad_hess(self, z: Array, XB: Array, w_B: Array):
+        """Gradient and Hessian diagonal restricted to a bundle slab.
+
+        XB: (s, P) dense column slab. Returns (g_B, h_B), each (P,).
+        The two tall-skinny matvecs here are the compute hot-spot that
+        kernels/pcdn_direction fuses on TPU.
+        """
+        u = self.grad_factor(z)
+        v = self.hess_factor(z)
+        g = XB.T @ u
+        h = jnp.square(XB).T @ v
+        if self.elastic_net_l2:
+            g = g + self.elastic_net_l2 * w_B
+            h = h + self.elastic_net_l2
+        return g, jnp.maximum(h, HESSIAN_FLOOR)
+
+    def full_grad(self, z: Array, w: Array) -> Array:
+        """grad L(w) (n,) — used by TRON and the KKT stopping criterion."""
+        g = self.X.T @ self.grad_factor(z)
+        if self.elastic_net_l2:
+            g = g + self.elastic_net_l2 * w
+        return g
+
+    # -- KKT optimality measure ----------------------------------------------
+    def kkt_violation(self, w: Array, z: Optional[Array] = None) -> Array:
+        """inf-norm of the minimum-norm subgradient of F_c at w.
+
+        v_j = g_j + 1        if w_j > 0
+            = g_j - 1        if w_j < 0
+            = max(|g_j|-1,0) if w_j = 0
+        Zero iff w is optimal. Used as the LIBLINEAR-style outer stop.
+        """
+        if z is None:
+            z = self.margins(w)
+        g = self.full_grad(z, w)
+        pos = g + 1.0
+        neg = g - 1.0
+        zero = jnp.maximum(jnp.abs(g) - 1.0, 0.0)
+        v = jnp.where(w > 0, pos, jnp.where(w < 0, neg, zero))
+        return jnp.max(jnp.abs(v))
+
+    # -- Lemma 1 quantities ----------------------------------------------------
+    def column_norms_sq(self) -> Array:
+        """(X^T X)_jj for j in N — the lambda_j of Lemma 1 / Theorem 2."""
+        return jnp.sum(jnp.square(self.X), axis=0)
+
+
+def make_problem(
+    X,
+    y,
+    c: float,
+    loss: str = "logistic",
+    elastic_net_l2: float = 0.0,
+    dtype=jnp.float32,
+) -> L1Problem:
+    X = jnp.asarray(np.asarray(X), dtype=dtype)
+    y = jnp.asarray(np.asarray(y), dtype=dtype)
+    return L1Problem(X=X, y=y, c=float(c), loss_name=loss,
+                     elastic_net_l2=float(elastic_net_l2))
+
+
+def expected_max_column_norm(problem: L1Problem, P: int) -> float:
+    """E_B[ lambda_bar(B) ] for uniform random size-P bundles (Lemma 1a).
+
+    f(P) = (1/C(n,P)) * sum_k lambda_(k) * C(k-1, P-1)
+    computed stably in log space with numpy (analysis-time only).
+    """
+    lam = np.sort(np.asarray(problem.column_norms_sq(), dtype=np.float64))
+    return float(expected_max_of_sample(lam, P))
+
+
+def expected_max_of_sample(lam_sorted: np.ndarray, P: int) -> float:
+    """E[max of a uniform size-P subset] given sorted values (Lemma 1a Eq. 22).
+
+    Weight of the k-th smallest value (1-indexed) is C(k-1,P-1)/C(n,P);
+    computed in log space via cumulative log-factorials (no scipy needed).
+    """
+    lam_sorted = np.asarray(lam_sorted, dtype=np.float64)
+    n = lam_sorted.shape[0]
+    P = int(P)
+    if not 1 <= P <= n:
+        raise ValueError(f"P={P} out of [1, {n}]")
+    if P == 1:
+        return float(lam_sorted.mean())
+    # log k! for k = 0..n
+    logfact = np.concatenate([[0.0], np.cumsum(np.log(np.arange(1, n + 1)))])
+
+    def logC(a: np.ndarray, b: int) -> np.ndarray:  # log C(a, b), a >= b
+        return logfact[a] - logfact[b] - logfact[a - b]
+
+    k = np.arange(P, n + 1)  # only k >= P contribute
+    logw = logC(k - 1, P - 1) - logC(np.array([n]), P)
+    w = np.exp(logw)
+    return float(np.sum(w * lam_sorted[P - 1:]))

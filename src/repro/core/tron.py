@@ -1,0 +1,170 @@
+"""Trust Region Newton (TRON) baseline (Lin & More 1999; Yuan et al. 2010).
+
+Comparison solver used by the paper (section 5.1/5.2). For the l1 problem we
+use the standard bound-constrained reformulation with duplicated variables
+
+    min_{v >= 0} f(v) = c sum_i phi((v+ - v-) . x_i, y_i) + sum_j v_j ,
+    v = [v+; v-] in R^{2n}_+,  w = v+ - v- ,
+
+and run projected trust-region Newton: free-set identification from the
+projected gradient, truncated conjugate-gradient on the free variables,
+projected (Armijo) line search with sigma = 0.01, beta = 0.1 (paper section
+5.1), and the classic actual/predicted radius update.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import HESSIAN_FLOOR
+from repro.core.problem import L1Problem
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TRONConfig:
+    max_outer: int = 500
+    max_cg: int = 50
+    tol_kkt: float = 1e-3
+    sigma: float = 0.01   # projected line search sufficient-decrease
+    beta: float = 0.1     # projected line search backtracking factor
+    eta0: float = 1e-4    # radius update thresholds (Lin-More)
+    eta1: float = 0.25
+    eta2: float = 0.75
+
+
+class TRONResult(NamedTuple):
+    w: Array
+    objective: float
+    n_outer: int
+    converged: bool
+    history: dict
+
+
+def _make_oracles(problem: L1Problem):
+    X, y, c = problem.X, problem.y, problem.c
+    loss = problem.loss
+    n = problem.n_features
+
+    @jax.jit
+    def fgrad(v):
+        w = v[:n] - v[n:]
+        z = X @ w
+        f = c * jnp.sum(loss.value(z, y)) + jnp.sum(v)
+        u = c * loss.dz(z, y)
+        g = X.T @ u
+        grad = jnp.concatenate([g, -g]) + 1.0
+        return f, grad, z
+
+    @jax.jit
+    def hess_vec(z, p):
+        pw = p[:n] - p[n:]
+        hv = X.T @ (jnp.maximum(c * loss.d2z(z, y), HESSIAN_FLOOR) * (X @ pw))
+        return jnp.concatenate([hv, -hv])
+
+    return fgrad, hess_vec
+
+
+def _truncated_cg(hess_vec, z, grad, free, radius, max_cg, tol=0.1):
+    """CG on the free set for H p = -grad, truncated at the TR boundary."""
+    g = jnp.where(free, grad, 0.0)
+    p = jnp.zeros_like(g)
+    r = -g
+    d = r
+    rr = jnp.vdot(r, r)
+    gnorm = jnp.sqrt(rr)
+    for _ in range(max_cg):
+        if float(jnp.sqrt(rr)) <= tol * float(gnorm) + 1e-12:
+            break
+        Hd = jnp.where(free, hess_vec(z, jnp.where(free, d, 0.0)), 0.0)
+        dHd = jnp.vdot(d, Hd)
+        if float(dHd) <= 1e-16:  # nonpositive curvature: go to boundary
+            tau = _boundary_tau(p, d, radius)
+            return p + tau * d, True
+        alpha = rr / dHd
+        p_next = p + alpha * d
+        if float(jnp.linalg.norm(p_next)) >= radius:
+            tau = _boundary_tau(p, d, radius)
+            return p + tau * d, True
+        p = p_next
+        r = r - alpha * Hd
+        rr_next = jnp.vdot(r, r)
+        d = r + (rr_next / rr) * d
+        rr = rr_next
+    return p, False
+
+
+def _boundary_tau(p, d, radius):
+    """largest tau >= 0 with ||p + tau d|| = radius."""
+    pp = float(jnp.vdot(p, p))
+    pd = float(jnp.vdot(p, d))
+    dd = float(jnp.vdot(d, d)) + 1e-30
+    disc = max(pd * pd + dd * (radius * radius - pp), 0.0)
+    return (-pd + np.sqrt(disc)) / dd
+
+
+def solve(problem: L1Problem, cfg: TRONConfig = TRONConfig()) -> TRONResult:
+    n = problem.n_features
+    fgrad, hess_vec = _make_oracles(problem)
+    v = jnp.zeros((2 * n,), problem.X.dtype)
+    f, grad, z = fgrad(v)
+    radius = float(jnp.linalg.norm(grad))
+
+    hist = {"outer_iter": [], "objective": [], "kkt": [], "wall_time": []}
+    t0 = time.perf_counter()
+    converged = False
+    it = 0
+    for it in range(cfg.max_outer):
+        # projected-gradient KKT measure for v >= 0:
+        pg = jnp.where((v > 0) | (grad < 0), grad, 0.0)
+        kkt = float(jnp.max(jnp.abs(pg)))
+        hist["outer_iter"].append(it)
+        hist["objective"].append(float(f))
+        hist["kkt"].append(kkt)
+        hist["wall_time"].append(time.perf_counter() - t0)
+        if kkt <= cfg.tol_kkt:
+            converged = True
+            break
+
+        free = (v > 0) | (grad < 0)
+        p, _ = _truncated_cg(hess_vec, z, grad, free, radius, cfg.max_cg)
+
+        # projected Armijo line search (sigma, beta from paper section 5.1)
+        gTp = float(jnp.vdot(grad, p))
+        step = 1.0
+        accepted = False
+        for _ in range(30):
+            v_new = jnp.maximum(v + step * p, 0.0)
+            f_new, grad_new, z_new = fgrad(v_new)
+            gTd = float(jnp.vdot(grad, v_new - v))
+            if float(f_new) - float(f) <= cfg.sigma * gTd and gTd <= 0:
+                accepted = True
+                break
+            step *= cfg.beta
+        if not accepted:
+            radius *= 0.25
+            continue
+
+        # radius update from actual vs predicted reduction
+        s = v_new - v
+        pred = float(jnp.vdot(grad, s) + 0.5 * jnp.vdot(s, hess_vec(z, s)))
+        actual = float(f_new) - float(f)
+        rho = actual / pred if pred < 0 else -1.0
+        snorm = float(jnp.linalg.norm(s))
+        if rho < cfg.eta1:
+            radius = max(0.25 * radius, 0.5 * snorm)
+        elif rho > cfg.eta2 and snorm >= 0.9 * radius:
+            radius = 2.0 * radius
+        if rho > cfg.eta0:
+            v, f, grad, z = v_new, f_new, grad_new, z_new
+
+    w = v[:n] - v[n:]
+    return TRONResult(w=w, objective=float(f), n_outer=it + 1,
+                      converged=converged,
+                      history={k: np.asarray(x) for k, x in hist.items()})

@@ -1,0 +1,78 @@
+"""LIBSVM text format reader/writer (the paper's six datasets ship in it).
+
+Format, one sample per line:   <label> <idx>:<val> <idx>:<val> ...
+Indices are 1-based. Returns dense float32 arrays (the solver's TPU
+adaptation works on dense bundle slabs — DESIGN.md section 3.1); a CSR
+triple is also returned for sparsity-aware callers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRMatrix:
+    data: np.ndarray      # (nnz,) float32
+    indices: np.ndarray   # (nnz,) int32 column ids
+    indptr: np.ndarray    # (s+1,) int64
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.data.shape[0])
+
+    def to_dense(self) -> np.ndarray:
+        s, n = self.shape
+        out = np.zeros((s, n), dtype=np.float32)
+        for i in range(s):
+            lo, hi = self.indptr[i], self.indptr[i + 1]
+            out[i, self.indices[lo:hi]] = self.data[lo:hi]
+        return out
+
+    def sparsity(self) -> float:
+        s, n = self.shape
+        return 1.0 - self.nnz / float(s * n)
+
+
+def load_libsvm(path: str, n_features: Optional[int] = None,
+                dense: bool = True):
+    """-> (X, y) with X dense (s, n) float32, y (s,) float32 in {-1, +1};
+    or (csr, y) when dense=False."""
+    labels, rows_i, rows_v, ptr = [], [], [], [0]
+    max_idx = 0
+    with open(path, "r") as fh:
+        for line in fh:
+            parts = line.split()
+            if not parts:
+                continue
+            labels.append(float(parts[0]))
+            for tok in parts[1:]:
+                k, v = tok.split(":")
+                j = int(k) - 1
+                max_idx = max(max_idx, j + 1)
+                rows_i.append(j)
+                rows_v.append(float(v))
+            ptr.append(len(rows_i))
+    n = n_features or max_idx
+    y = np.asarray(labels, dtype=np.float32)
+    # normalize labels to {-1, +1} (a9a-style 0/1 files appear in the wild)
+    uniq = np.unique(y)
+    if set(uniq.tolist()) <= {0.0, 1.0}:
+        y = np.where(y > 0, 1.0, -1.0).astype(np.float32)
+    csr = CSRMatrix(np.asarray(rows_v, np.float32),
+                    np.asarray(rows_i, np.int32),
+                    np.asarray(ptr, np.int64), (len(labels), n))
+    if dense:
+        return csr.to_dense(), y
+    return csr, y
+
+
+def save_libsvm(path: str, X: np.ndarray, y: np.ndarray) -> None:
+    with open(path, "w") as fh:
+        for xi, yi in zip(X, y):
+            nz = np.nonzero(xi)[0]
+            feats = " ".join(f"{j + 1}:{xi[j]:.6g}" for j in nz)
+            fh.write(f"{yi:g} {feats}\n")

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (+ the LM stack's).
+
+  pcdn_direction.py  — fused bundle grad/Hessian/Eq.-5 direction: reads the
+                       (s, P) slab from HBM once (the paper's section 3.1
+                       "touch x^j twice" cache argument, TPU-native)
+  pcdn_linesearch.py — batched multi-candidate Armijo objective deltas
+                       (replaces Algorithm 4's sequential backtracking)
+  flash_attention.py — online-softmax tiled attention for the model zoo
+
+Each kernel ships with `ops.py` (jit'd, padding-safe public wrapper;
+custom_vjp for attention) and `ref.py` (pure-jnp oracle). On this CPU
+container kernels run in interpret mode (tests sweep shapes/dtypes vs the
+oracles); on real TPU set ``repro.kernels.ops.INTERPRET = False``.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

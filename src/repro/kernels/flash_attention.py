@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: FlashAttention-style fused attention (LM hot-spot).
+
+Online-softmax tiled attention: never materializes the (S, S) score matrix
+in HBM. Grid = (batch*heads, q_tiles, kv_tiles) with the kv dimension
+innermost; running max / normalizer / output accumulator live in VMEM
+scratch across kv tiles. Causal tiles strictly above the diagonal are
+skipped (no matmul issued). GQA is handled by the ops.py wrapper (kv heads
+are broadcast to q heads before the launch; the kernel sees matched heads).
+
+Block shapes default to (128, 128) q x kv tiles — MXU-aligned for every
+head_dim in the assigned archs (64, 128, 256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr,
+            *, causal: bool, block_q: int, block_k: int, n_kv: int,
+            sm_scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    # causal: skip tiles entirely above the diagonal
+    should_run = True
+    if causal:
+        should_run = j * block_k <= i * block_q + block_q - 1
+
+    @pl.when(should_run)
+    def _compute():
+        q = q_ref[0]                       # (Bq, D)
+        k = k_ref[0]                       # (Bk, D)
+        v = v_ref[0]                       # (Bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale   # (Bq, Bk)
+        if causal:
+            qi = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kj = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qi >= kj, s, NEG_INF)
+        m_prev = m_scr[...]                # (Bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)             # (Bq, Bk)
+        corr = jnp.exp(m_prev - m_new)     # (Bq, 1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _write():
+        # fully-masked rows (padding) have l == 0; guard the division
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: Array, k: Array, v: Array,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> Array:
+    """Raw launch. q: (BH, Sq, D), k/v: (BH, Skv, D); Sq % block_q == 0,
+    Skv % block_k == 0. Returns (BH, Sq, D) in q.dtype."""
+    BH, Sq, D = q.shape
+    _, Skv, _ = k.shape
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv)
+    n_q = Sq // block_q
+    n_kv = Skv // block_k
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, block_q=block_q, block_k=block_k,
+        n_kv=n_kv, sm_scale=float(sm_scale))
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

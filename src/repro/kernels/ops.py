@@ -1,0 +1,118 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to tile-aligned shapes, dtype plumbing, GQA head broadcast,
+and the custom_vjp for attention (forward = Pallas, backward = recompute
+with the jnp oracle — standard flash recomputation strategy).
+
+`interpret` defaults to True: this container is CPU-only, so kernels always
+run in interpreter mode here; on real TPU pass interpret=False (e.g. via
+repro.kernels.ops.INTERPRET = False at startup).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.pcdn_direction import pcdn_direction_kernel
+from repro.kernels.pcdn_linesearch import pcdn_linesearch_kernel
+
+Array = jax.Array
+
+INTERPRET = True  # flip to False on real TPU
+
+
+def _pad_to(x: Array, axis: int, multiple: int, value=0.0) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("l2", "block_s", "block_p"))
+def pcdn_direction(XB: Array, u: Array, v: Array, w_B: Array,
+                   l2: float = 0.0, block_s: int = 512,
+                   block_p: int = 128):
+    """Fused bundle direction. XB (s, P) any float dtype -> (d, g, h) (P,).
+
+    Pads s and P to tile multiples; padded samples carry u = v = 0 (no
+    contribution), padded features get w = 0 / g = 0 -> d = 0 and are
+    sliced away.
+    """
+    s, P = XB.shape
+    bs = min(block_s, max(8, s))
+    XBp = _pad_to(_pad_to(XB, 0, bs), 1, block_p)
+    up = _pad_to(u, 0, bs)
+    vp = _pad_to(v, 0, bs)
+    wp = _pad_to(w_B, 0, block_p)
+    d, g, h = pcdn_direction_kernel(XBp, up, vp, wp, l2=l2, block_s=bs,
+                                    block_p=block_p, interpret=INTERPRET)
+    return d[:P], g[:P], h[:P]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "block_s"))
+def pcdn_linesearch(z: Array, delta: Array, y: Array, alphas: Array,
+                    kind: str = "logistic", block_s: int = 1024) -> Array:
+    """Batched candidate loss deltas (Q,). Pads s; padding contributes 0
+    because z = delta = y = 0 rows give phi(z+a*d) - phi(z) = 0."""
+    s = z.shape[0]
+    bs = min(block_s, max(8, s))
+    zp = _pad_to(z, 0, bs)
+    dp = _pad_to(delta, 0, bs)
+    yp = _pad_to(y, 0, bs)
+    return pcdn_linesearch_kernel(zp, dp, yp, alphas, kind=kind,
+                                  block_s=bs, interpret=INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# attention with flash forward + recompute backward
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q: Array, k: Array, v: Array, causal: bool = True,
+                    sm_scale: float | None = None) -> Array:
+    """q: (BH, Sq, D), k/v: (BH, Skv, D) -> (BH, Sq, D)."""
+    return _flash_fwd_impl(q, k, v, causal, sm_scale)
+
+
+def _flash_fwd_impl(q, k, v, causal, sm_scale):
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    bq = min(128, max(8, Sq))
+    bk = min(128, max(8, Skv))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    # padded kv columns must not attend: causal mask handles the q side;
+    # for kv we rely on padded k rows producing score 0*scale at m==0 —
+    # instead mask explicitly by pushing padded keys to -inf via a huge
+    # negative first component trick is brittle, so pad k with zeros and
+    # mask via length: simplest correct route is slicing when no padding
+    # was needed, else fall back to masked reference.
+    if qp.shape[1] != Sq or kp.shape[1] != Skv:
+        return ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+    out = flash_attention_kernel(qp, kp, vp, causal=causal,
+                                 sm_scale=sm_scale, block_q=bq, block_k=bk,
+                                 interpret=INTERPRET)
+    return out[:, :Sq]
+
+
+def _flash_fwd(q, k, v, causal, sm_scale):
+    return _flash_fwd_impl(q, k, v, causal, sm_scale), (q, k, v)
+
+
+def _flash_bwd(causal, sm_scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=causal,
+                                             sm_scale=sm_scale), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused PCDN bundle direction (DESIGN.md section 3.1).
+
+For a dense bundle slab X_B (s, P) and per-sample factors u = c*dphi/dz,
+v = c*d2phi/dz2 this computes, in ONE pass over X_B:
+
+    g_j = sum_i u_i X_ij            (bundle gradient,   Eq. 12 first line)
+    h_j = max(sum_i v_i X_ij^2, nu) (diag Hessian,      Eq. 12 second line)
+    d_j = Eq. 5 soft-threshold Newton direction
+
+The slab is read from HBM once; the three reductions + the elementwise
+epilogue run out of VMEM. The un-fused jnp path reads X_B twice (g then h).
+Grid = (P_tiles, s_tiles) with the sample dimension innermost so partial
+(g, h) accumulate in VMEM scratch across s-tiles; the epilogue fires on the
+last s-tile. MXU alignment: block shapes are (BS, BP) = (512, 128) by
+default — both multiples of the 128-lane register tiling; the two
+reductions are expressed as (1, BS) @ (BS, BP) matmuls so they map onto the
+MXU rather than the VPU reduction tree.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_S = 512
+DEFAULT_BLOCK_P = 128
+HESSIAN_FLOOR = 1e-12
+
+
+def _kernel(xb_ref, u_ref, v_ref, w_ref, l2_ref,
+            d_ref, g_ref, h_ref, acc_g, acc_h, *, n_s_tiles: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_h[...] = jnp.zeros_like(acc_h)
+
+    xb = xb_ref[...]                      # (BS, BP)
+    u = u_ref[...]                        # (1, BS)
+    v = v_ref[...]                        # (1, BS)
+    # (1, BS) @ (BS, BP) -> (1, BP): MXU-shaped reductions over samples.
+    acc_g[...] += jnp.dot(u, xb, preferred_element_type=jnp.float32)
+    acc_h[...] += jnp.dot(v, xb * xb, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_s_tiles - 1)
+    def _epilogue():
+        w = w_ref[...]                    # (1, BP)
+        l2 = l2_ref[0, 0]
+        g = acc_g[...] + l2 * w
+        h = jnp.maximum(acc_h[...] + l2, HESSIAN_FLOOR)
+        # Eq. 5 closed form
+        d_neg = -(g + 1.0) / h
+        d_pos = -(g - 1.0) / h
+        d = jnp.where(g + 1.0 <= h * w, d_neg,
+                      jnp.where(g - 1.0 >= h * w, d_pos, -w))
+        d_ref[...] = d
+        g_ref[...] = g
+        h_ref[...] = h
+
+
+def pcdn_direction_kernel(
+    XB: Array, u: Array, v: Array, w_B: Array,
+    l2: float = 0.0,
+    block_s: int = DEFAULT_BLOCK_S,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool = True,
+):
+    """Raw kernel launch. Shapes must already be tile-aligned:
+    XB (s, P) with s % block_s == 0 and P % block_p == 0.
+    Returns (d, g, h), each (P,) float32.
+    """
+    s, P = XB.shape
+    assert s % block_s == 0 and P % block_p == 0, (s, P, block_s, block_p)
+    n_s = s // block_s
+    n_p = P // block_p
+    u2 = u.reshape(1, s).astype(jnp.float32)
+    v2 = v.reshape(1, s).astype(jnp.float32)
+    w2 = w_B.reshape(1, P).astype(jnp.float32)
+    l2a = jnp.full((1, 1), l2, jnp.float32)
+
+    kernel = functools.partial(_kernel, n_s_tiles=n_s)
+    out_shape = [jax.ShapeDtypeStruct((1, P), jnp.float32)] * 3
+    d, g, h = pl.pallas_call(
+        kernel,
+        grid=(n_p, n_s),
+        in_specs=[
+            pl.BlockSpec((block_s, block_p), lambda i, k: (k, i)),  # XB
+            pl.BlockSpec((1, block_s), lambda i, k: (0, k)),        # u
+            pl.BlockSpec((1, block_s), lambda i, k: (0, k)),        # v
+            pl.BlockSpec((1, block_p), lambda i, k: (0, i)),        # w_B
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # l2
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_p), lambda i, k: (0, i)),
+            pl.BlockSpec((1, block_p), lambda i, k: (0, i)),
+            pl.BlockSpec((1, block_p), lambda i, k: (0, i)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, block_p), jnp.float32),
+            pltpu.VMEM((1, block_p), jnp.float32),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(XB.astype(jnp.float32), u2, v2, w2, l2a)
+    return d.reshape(P), g.reshape(P), h.reshape(P)

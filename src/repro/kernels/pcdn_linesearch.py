@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: batched multi-candidate Armijo evaluation.
+
+The paper's Algorithm 4 backtracks sequentially (q = 0, 1, 2, ...), each
+step touching the per-sample intermediates. On TPU that is a chain of tiny
+launches + host syncs, so we instead evaluate ALL Q candidates
+alpha_q = beta^q in one pass (DESIGN.md section 3.2):
+
+    out[q] = sum_i  phi(z_i + alpha_q * delta_i, y_i) - phi(z_i, y_i)
+
+Grid = (s_tiles,); each tile loads (z, delta, y) slices once into VMEM,
+broadcasts against the (Q,) candidate vector held in VMEM across the whole
+launch, and accumulates the (1, Q) partial sums in scratch. The l1 part of
+Eq. 11 is P-dimensional and trivially cheap — the jit wrapper adds it
+outside. Loss selection is static (logistic / squared_hinge / squared).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_S = 1024
+
+
+def _phi(kind: str, z, y):
+    if kind == "logistic":
+        m = -y * z
+        return jnp.maximum(m, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(m)))
+    if kind == "squared_hinge":
+        return jnp.square(jnp.maximum(0.0, 1.0 - y * z))
+    if kind == "squared":
+        return 0.5 * jnp.square(z - y)
+    raise ValueError(kind)
+
+
+def _kernel(z_ref, delta_ref, y_ref, alphas_ref, out_ref, acc,
+            *, kind: str, n_s_tiles: int):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    z = z_ref[...]            # (1, BS)
+    dlt = delta_ref[...]      # (1, BS)
+    y = y_ref[...]            # (1, BS)
+    alphas = alphas_ref[...]  # (Q, 1)
+    zq = z + alphas * dlt     # (Q, BS) broadcast
+    vals = _phi(kind, zq, y) - _phi(kind, z, y)
+    acc[...] += jnp.sum(vals, axis=1, keepdims=True)  # (Q, 1)
+
+    @pl.when(k == n_s_tiles - 1)
+    def _write():
+        out_ref[...] = acc[...]
+
+
+def pcdn_linesearch_kernel(
+    z: Array, delta: Array, y: Array, alphas: Array,
+    kind: str = "logistic",
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = True,
+) -> Array:
+    """Raw launch. z, delta, y: (s,) with s % block_s == 0; alphas: (Q,).
+    Returns (Q,) float32 loss deltas (caller scales by c, adds l1 part)."""
+    s = z.shape[0]
+    Q = alphas.shape[0]
+    assert s % block_s == 0, (s, block_s)
+    n_s = s // block_s
+
+    kernel = functools.partial(_kernel, kind=kind, n_s_tiles=n_s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_s,),
+        in_specs=[
+            pl.BlockSpec((1, block_s), lambda k: (0, k)),
+            pl.BlockSpec((1, block_s), lambda k: (0, k)),
+            pl.BlockSpec((1, block_s), lambda k: (0, k)),
+            pl.BlockSpec((Q, 1), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((Q, 1), lambda k: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((Q, 1), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((Q, 1), jnp.float32),
+        interpret=interpret,
+    )(z.reshape(1, s).astype(jnp.float32),
+      delta.reshape(1, s).astype(jnp.float32),
+      y.reshape(1, s).astype(jnp.float32),
+      alphas.reshape(Q, 1).astype(jnp.float32))
+    return out.reshape(Q)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.direction import newton_direction
+from repro.core.losses import HESSIAN_FLOOR, get_loss
+
+Array = jax.Array
+
+
+def pcdn_direction_ref(XB: Array, u: Array, v: Array, w_B: Array,
+                       l2: float = 0.0):
+    """(d, g, h) for a bundle slab — mirrors L1Problem.bundle_grad_hess +
+    newton_direction, computed in float32."""
+    XB = XB.astype(jnp.float32)
+    g = XB.T @ u.astype(jnp.float32)
+    h = jnp.square(XB).T @ v.astype(jnp.float32)
+    g = g + l2 * w_B
+    h = jnp.maximum(h + l2, HESSIAN_FLOOR)
+    d = newton_direction(g, h, w_B.astype(jnp.float32))
+    return d, g, h
+
+
+def pcdn_linesearch_ref(z: Array, delta: Array, y: Array, alphas: Array,
+                        kind: str = "logistic") -> Array:
+    """(Q,) per-candidate loss deltas: sum_i phi(z + a*delta) - phi(z)."""
+    loss = get_loss(kind)
+    z = z.astype(jnp.float32)
+    zq = z[None, :] + alphas.astype(jnp.float32)[:, None] * \
+        delta.astype(jnp.float32)[None, :]
+    return jnp.sum(loss.value(zq, y[None, :]) - loss.value(z, y)[None, :],
+                   axis=-1)
+
+
+def attention_ref(q: Array, k: Array, v: Array, causal: bool = True,
+                  sm_scale: float | None = None) -> Array:
+    """Dense softmax attention. q: (BH, Sq, D), k/v: (BH, Skv, D)."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None]
+        kj = jnp.arange(Skv)[None, :]
+        s = jnp.where(qi >= kj, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

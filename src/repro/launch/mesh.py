@@ -1,0 +1,35 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis.
+
+    Requires 512 placeholder devices for the dry-run
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=512`` — set by
+    launch/dryrun.py only); single-pod uses the first 256.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run "
+            f"under launch/dryrun.py (it forces 512 host devices) or on "
+            f"real hardware")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = n, 1
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:data * model])

@@ -1,0 +1,71 @@
+"""Batched serving driver: prefill a batch of prompts, decode greedily.
+
+``python -m repro.launch.serve --arch qwen2-0.5b --batch 4 --new-tokens 16``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import decode as dec
+from repro.models.transformer import Model
+from repro.train.steps import make_serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=list(ARCH_IDS))
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    mesh = make_host_mesh()
+    model = Model(cfg, mesh)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (args.batch, cfg.vlm.n_patches, cfg.d_model),
+            jnp.float32).astype(cfg.jnp_dtype) * 0.02
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.encdec.encoder_frames, cfg.d_model),
+            jnp.float32).astype(cfg.jnp_dtype) * 0.02
+
+    max_len = args.prompt_len + args.new_tokens + \
+        (cfg.vlm.n_patches if cfg.family == "vlm" else 0)
+    t0 = time.time()
+    logits, cache = dec.prefill(model, params, batch, max_len=max_len)
+    serve_step = jax.jit(make_serve_step(model))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    for _ in range(args.new_tokens - 1):
+        logits, cache = serve_step(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    out = jnp.concatenate(generated, axis=1)
+    dt = time.time() - t0
+    tps = args.batch * args.new_tokens / dt
+    print(f"[serve] {args.arch}: batch={args.batch} "
+          f"prompt={args.prompt_len} new={args.new_tokens} "
+          f"-> {tps:.1f} tok/s (incl. compile)")
+    print("[serve] sample continuations:", np.asarray(out[:2, :8]))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+train_step / serve_step against these. `concrete=True` materializes small
+random batches for smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeCell
+
+Array = jax.Array
+
+
+def _mk(concrete, key, shape, dtype, high=None):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if dtype == jnp.int32:
+        return jax.random.randint(key, shape, 0, high or 2, jnp.int32)
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * 0.02
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                      concrete: bool = False, seed: int = 0) -> Dict[str, Any]:
+    """Inputs of `train_step`: tokens + labels (+ modality stubs)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    V = cfg.vocab_size
+    out = {
+        "tokens": _mk(concrete, keys[0], (batch, seq), jnp.int32, V),
+        "labels": _mk(concrete, keys[1], (batch, seq), jnp.int32, V),
+    }
+    if cfg.family == "vlm":
+        # ViT frontend stub: precomputed patch embeddings, already projected
+        # to d_model; they occupy the first n_patches positions, so text
+        # length is seq - n_patches (total sequence == the assigned seq).
+        npatch = cfg.vlm.n_patches
+        text = max(seq - npatch, 1)
+        out["tokens"] = _mk(concrete, keys[0], (batch, text), jnp.int32, V)
+        out["labels"] = _mk(concrete, keys[1], (batch, npatch + text),
+                            jnp.int32, V)
+        out["patches"] = _mk(concrete, keys[2], (batch, npatch, cfg.d_model),
+                             cfg.jnp_dtype)
+        mask = np.concatenate([np.zeros((batch, npatch), np.float32),
+                               np.ones((batch, text), np.float32)], axis=1)
+        out["loss_mask"] = (jnp.asarray(mask) if concrete
+                            else jax.ShapeDtypeStruct((batch, npatch + text),
+                                                      jnp.float32))
+    if cfg.family == "encdec":
+        # audio frontend stub: precomputed frame embeddings
+        out["frames"] = _mk(concrete, keys[3],
+                            (batch, cfg.encdec.encoder_frames, cfg.d_model),
+                            cfg.jnp_dtype)
+    return out
+
+
+def decode_batch_specs(cfg: ModelConfig, batch: int,
+                       concrete: bool = False, seed: int = 0):
+    """Inputs of `serve_step`: one new token per sequence."""
+    key = jax.random.PRNGKey(seed)
+    return {"tokens": _mk(concrete, key, (batch, 1), jnp.int32,
+                          cfg.vocab_size)}
+
+
+def cell_input_specs(cfg: ModelConfig, cell: ShapeCell,
+                     concrete: bool = False):
+    if cell.kind in ("train", "prefill"):
+        return train_batch_specs(cfg, cell.global_batch, cell.seq_len,
+                                 concrete)
+    return decode_batch_specs(cfg, cell.global_batch, concrete)

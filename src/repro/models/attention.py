@@ -1,0 +1,439 @@
+"""GQA/MQA attention with RoPE, causal / sliding-window / bidirectional
+masks, cross-attention, and a KV cache for decode.
+
+Head layout: q (B, S, Kv, G, Dh) where H = Kv * G (grouped-query);
+k/v (B, S, Kv, Dh). The scores einsum keeps the kv-head axis so GQA does
+no materialized repeat. Sharding: heads axes carry the "heads"/"kv_heads"
+logical names and resolve onto the model mesh axis when divisible.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+from repro.models.layers import rope
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _head_padded(decl: sh.ParamDecl, dim: int, real: int):
+    """Zero-initialize padded head slices so padding is output-exact."""
+    inner = decl.init
+
+    def init(key, shape, dtype):
+        w = inner(key, shape, dtype)
+        idx = jnp.arange(shape[dim])
+        mask = (idx < real).reshape(
+            [-1 if i == dim else 1 for i in range(len(shape))])
+        return w * mask.astype(dtype)
+
+    return sh.ParamDecl(decl.shape, decl.dtype, decl.logical_axes, init)
+
+
+def attn_decls(cfg: ModelConfig, cross: bool = False):
+    d, dt = cfg.d_model, cfg.jnp_dtype
+    H, Kv, Dh = cfg.eff_heads, cfg.eff_kv_heads, cfg.resolved_head_dim
+    rH, rKv = cfg.n_heads, cfg.n_kv_heads
+    assert H % Kv == 0, (H, Kv)
+    if cfg.fused_qkv and not cross:
+        decls = {
+            "wqkv": sh.dense((d, H + 2 * Kv, Dh),
+                             ("embed", "heads", "head_dim"), dt),
+            "wo": sh.dense((H, Dh, d), ("heads", "head_dim", "embed"), dt,
+                           fan_in=rH * Dh),
+        }
+        if cfg.qkv_bias:
+            decls["bqkv"] = sh.zeros((H + 2 * Kv, Dh),
+                                     ("heads", "head_dim"), dt)
+        if H != rH:
+            decls["wo"] = _head_padded(decls["wo"], 0, rH)
+        return decls
+    decls = {
+        "wq": sh.dense((d, H, Dh), ("embed", "heads", "head_dim"), dt),
+        "wk": sh.dense((d, Kv, Dh), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": sh.dense((d, Kv, Dh), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": sh.dense((H, Dh, d), ("heads", "head_dim", "embed"), dt,
+                       fan_in=rH * Dh),
+    }
+    if cfg.qkv_bias:
+        decls["bq"] = sh.zeros((H, Dh), ("heads", "head_dim"), dt)
+        decls["bk"] = sh.zeros((Kv, Dh), ("kv_heads", "head_dim"), dt)
+        decls["bv"] = sh.zeros((Kv, Dh), ("kv_heads", "head_dim"), dt)
+    if H != rH:
+        decls["wq"] = _head_padded(decls["wq"], 1, rH)
+        decls["wo"] = _head_padded(decls["wo"], 0, rH)
+    if Kv != rKv:
+        decls["wk"] = _head_padded(decls["wk"], 1, rKv)
+        decls["wv"] = _head_padded(decls["wv"], 1, rKv)
+    return decls
+
+
+def _split_fused(cfg, out):
+    H, Kv = cfg.eff_heads, cfg.eff_kv_heads
+    return out[..., :H, :], out[..., H:H + Kv, :], out[..., H + Kv:, :]
+
+
+def _project_qkv(cfg, p, x):
+    """(q, k, v) — single einsum when fused (one bwd all-reduce of dx)."""
+    if "wqkv" in p:
+        out = jnp.einsum("bsd,dhk->bshk", x, p["wqkv"])
+        if "bqkv" in p:
+            out = out + p["bqkv"]
+        return _split_fused(cfg, out)
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, x)
+    return q, k, v
+
+
+def _project_q(cfg, p, x):
+    if "wqkv" in p:
+        return _project_qkv(cfg, p, x)[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    return q
+
+
+def _project_kv(cfg, p, x):
+    if "wqkv" in p:
+        return _project_qkv(cfg, p, x)[1:]
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def _mask_bias(q_pos: Array, k_pos: Array, causal: bool, window: int,
+               k_valid: Optional[Array] = None) -> Array:
+    """(..., Sq, Sk) additive bias from positions."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok = jnp.broadcast_to(jnp.ones((), bool),
+                          jnp.broadcast_shapes(qp.shape, kp.shape))
+    if causal:
+        ok = ok & (qp >= kp)
+    if window > 0:
+        ok = ok & (qp - kp < window)
+    if k_valid is not None:
+        ok = ok & k_valid[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array,
+          bias: Array) -> Array:
+    """q (B,Sq,H,Dh), k/v (B,Sk,Kv,Dh), bias (B?,Sq,Sk) -> (B,Sq,H,Dh)."""
+    B, Sq, H, Dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, Dh)
+    scale = Dh ** -0.5
+    # keep operands in storage dtype; accumulate f32 on the MXU. An
+    # .astype(f32) on k here would materialize an f32 copy of the whole
+    # KV cache every decode step (measured 4.3 GB/step on grok decode).
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if bias.ndim == 2:           # (Sq, Sk) -> broadcast over batch
+        bias = bias[None]
+    while bias.ndim < s.ndim:    # (B, Sq, Sk) -> (B, 1, 1, Sq, Sk)
+        bias = bias[:, None]
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(B, Sq, H, Dh)
+
+
+class KVCache(NamedTuple):
+    k: Array          # (B, S_max, Kv, Dh)
+    v: Array          # (B, S_max, Kv, Dh)
+    length: Array     # () int32 — filled prefix length (uniform batch)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               n_layers: int = 0) -> KVCache:
+    """Stacked-over-layers cache (leading layer dim when n_layers > 0)."""
+    Kv, Dh = cfg.eff_kv_heads, cfg.resolved_head_dim
+    if cfg.attn_window > 0:
+        max_len = min(max_len, cfg.attn_window)
+    shape = (batch, max_len, Kv, Dh)
+    if n_layers:
+        shape = (n_layers,) + shape
+    dt = cfg.jnp_dtype
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt),
+                   jnp.zeros((), jnp.int32))
+
+
+# blockwise (flash-style) attention: never materializes (S, S) scores.
+# This is the jnp twin of kernels/flash_attention (which targets real TPU);
+# the dry-run lowers this version. Chunk sizes bound live memory to
+# (B, H, CQ, CKV) per block.
+BLOCK_Q = 512
+BLOCK_KV = 512
+BLOCKWISE_MIN_KV = 2048   # dense is fine (and faster to compile) below this
+
+
+import functools as _functools
+
+
+def _block_mask(q_pos, k_pos, causal, window, Sq, Skv):
+    """(cq, ckv) bool validity from position vectors computed off loop
+    indices — NEVER from precomputed position arrays, which XLA constant-
+    folds into (nq x nk x ...) mask tensors that dwarf the activations."""
+    ok = (k_pos < Skv)[None, :] & (q_pos < Sq)[:, None]
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return ok
+
+
+def _flash_fwd_scan(q, k, v, cq, ckv, causal, window, Sq, Skv):
+    """-> (out (B,Sq',H,Dh), lse (B,Kv,G,Sq')). Online-softmax over kv
+    chunks; the jnp twin of kernels/flash_attention."""
+    B, Sq_p, H, Dh = q.shape
+    Skv_p, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    nq, nk = Sq_p // cq, Skv_p // ckv
+    scale = Dh ** -0.5
+    qc = jnp.moveaxis(q.reshape(B, nq, cq, Kv, G, Dh), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, ckv, Kv, Dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ckv, Kv, Dh), 1, 0)
+
+    def q_chunk(_, qs):
+        qb, qi = qs
+        q_pos = qi * cq + jnp.arange(cq)
+
+        def kv_chunk(carry, ks):
+            m, l, acc = carry
+            kb, vb, ki = ks
+            k_pos = ki * ckv + jnp.arange(ckv)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            ok = _block_mask(q_pos, k_pos, causal, window, Sq, Skv)
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            pexp = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(pexp, axis=-1, keepdims=True)
+            acc = acc * corr + jnp.einsum(
+                "bkgqs,bskd->bkgqd", pexp.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Kv, G, cq, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, G, cq, 1), jnp.float32)
+        a0 = jnp.zeros((B, Kv, G, cq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_chunk, (m0, l0, a0),
+                                      (kc, vc, jnp.arange(nk)))
+        lsafe = jnp.maximum(l, 1e-30)
+        out = acc / lsafe                                # (B,Kv,G,cq,Dh)
+        lse = (m + jnp.log(lsafe))[..., 0]               # (B,Kv,G,cq)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, cq, Kv * G, Dh)
+        return None, (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_chunk, None,
+                                   (qc, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * cq, H, Dh)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, Kv, G, nq * cq)
+    return out, lse
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_mha(q, k, v, cq, ckv, causal, window, Sq, Skv):
+    out, _ = _flash_fwd_scan(q, k, v, cq, ckv, causal, window, Sq, Skv)
+    return out
+
+
+def _flash_mha_fwd(q, k, v, cq, ckv, causal, window, Sq, Skv):
+    out, lse = _flash_fwd_scan(q, k, v, cq, ckv, causal, window, Sq, Skv)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_mha_bwd(cq, ckv, causal, window, Sq, Skv, res, do):
+    """True flash backward: recompute p per block from (q, k, lse); O(S)
+    residuals instead of the O(S^2 / chunks) scan residuals autodiff would
+    save through the forward scans."""
+    q, k, v, out, lse = res
+    B, Sq_p, H, Dh = q.shape
+    Skv_p, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    nq, nk = Sq_p // cq, Skv_p // ckv
+    scale = Dh ** -0.5
+
+    # delta_i = sum_d do_i * out_i  (per q row)
+    dof = do.astype(jnp.float32).reshape(B, Sq_p, Kv, G, Dh)
+    outf = out.astype(jnp.float32).reshape(B, Sq_p, Kv, G, Dh)
+    delta = jnp.einsum("bqkgd,bqkgd->bkgq", dof, outf)   # (B,Kv,G,Sq')
+
+    qc = jnp.moveaxis(q.reshape(B, nq, cq, Kv, G, Dh), 1, 0)
+    doc = jnp.moveaxis(dof.reshape(B, nq, cq, Kv, G, Dh), 1, 0)
+    lsec = jnp.moveaxis(lse.reshape(B, Kv, G, nq, cq), 3, 0)
+    dlc = jnp.moveaxis(delta.reshape(B, Kv, G, nq, cq), 3, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, ckv, Kv, Dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ckv, Kv, Dh), 1, 0)
+
+    def q_loop(carry, qs):
+        dk_full, dv_full = carry       # (nk,B,ckv,Kv,Dh) each
+        qb, dob, lseb, dlb, qi = qs
+        q_pos = qi * cq + jnp.arange(cq)
+
+        def kv_loop(dq_acc_and_kv, ks):
+            dq_acc, dk_full, dv_full = dq_acc_and_kv
+            kb, vb, ki = ks
+            k_pos = ki * ckv + jnp.arange(ckv)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            ok = _block_mask(q_pos, k_pos, causal, window, Sq, Skv)
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lseb[..., None])             # (B,Kv,G,cq,ckv)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", dob, vb.astype(jnp.float32))
+            ds = p * (dp - dlb[..., None])               # (B,Kv,G,cq,ckv)
+            dq_c = jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                              kb.astype(jnp.float32)) * scale
+            dk_c = jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                              qb.astype(jnp.float32)) * scale
+            dv_c = jnp.einsum("bkgqs,bqkgd->bskd", p, dob)
+            dk_full = dk_full.at[ki].add(dk_c)
+            dv_full = dv_full.at[ki].add(dv_c)
+            return (dq_acc + dq_c, dk_full, dv_full), None
+
+        dq0 = jnp.zeros((B, cq, Kv, G, Dh), jnp.float32)
+        (dq_b, dk_full, dv_full), _ = jax.lax.scan(
+            kv_loop, (dq0, dk_full, dv_full), (kc, vc, jnp.arange(nk)))
+        return (dk_full, dv_full), dq_b
+
+    dk0 = jnp.zeros((nk, B, ckv, Kv, Dh), jnp.float32)
+    dv0 = jnp.zeros((nk, B, ckv, Kv, Dh), jnp.float32)
+    (dks, dvs), dqs = jax.lax.scan(
+        q_loop, (dk0, dv0),
+        (qc, doc, lsec, dlc, jnp.arange(nq)))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sq_p, H, Dh).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Skv_p, Kv, Dh).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Skv_p, Kv, Dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_mha.defvjp(_flash_mha_fwd, _flash_mha_bwd)
+
+
+def _blockwise_sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array,
+                    q_pos: Array, k_pos: Array, causal: bool,
+                    window: int) -> Array:
+    """q (B,Sq,H,Dh), k/v (B,Skv,Kv,Dh); contiguous positions assumed
+    (q and kv both starting at position 0)."""
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    cq = min(BLOCK_Q, Sq)
+    ckv = min(BLOCK_KV, Skv)
+    pq, pk = (-Sq) % cq, (-Skv) % ckv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    out = _flash_mha(q, k, v, cq, ckv, causal, window, Sq, Skv)
+    return out[:, :Sq]
+
+
+def attend_full(cfg: ModelConfig, p, x: Array, positions: Array,
+                causal: bool = True, window: int = 0,
+                kv_x: Optional[Array] = None,
+                kv_positions: Optional[Array] = None) -> Array:
+    """Training / prefill attention (no cache). Cross-attn when kv_x given.
+
+    Dispatches to blockwise (flash-style) attention when the kv length
+    crosses BLOCKWISE_MIN_KV — dense (S, S) scores do not fit HBM at the
+    assigned 32k shapes."""
+    if kv_x is None:
+        kv_x, kv_positions = x, positions
+        q, k, v = _project_qkv(cfg, p, x)
+    else:
+        q = _project_q(cfg, p, x)
+        k, v = _project_kv(cfg, p, kv_x)
+    if kv_positions is None:
+        kv_positions = jnp.arange(kv_x.shape[1])
+    if cfg.rope_theta > 0 and kv_x is x:  # rope for self-attn only
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    if kv_x.shape[1] >= BLOCKWISE_MIN_KV:
+        qpos = jnp.broadcast_to(positions, (x.shape[1],)) \
+            if positions.ndim == 1 else positions[0]
+        kpos = jnp.broadcast_to(kv_positions, (kv_x.shape[1],)) \
+            if kv_positions.ndim == 1 else kv_positions[0]
+        o = _blockwise_sdpa(cfg, q, k, v, qpos, kpos, causal, window)
+    else:
+        bias = _mask_bias(positions, kv_positions, causal, window)
+        o = _sdpa(cfg, q, k, v, bias)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def decode_step(cfg: ModelConfig, p, x: Array, cache: KVCache,
+                window: int = 0, constrain_fn=None) -> tuple[Array, KVCache]:
+    """One-token decode: x (B, 1, D). Updates the (possibly rolling) cache.
+
+    `constrain_fn(t)` (optional) re-shards the tiny per-step q/k/v tensors
+    to batch-only sharding. When the KV cache is SEQUENCE-sharded over the
+    model axis (kv_heads don't divide it), head-sharded q would make GSPMD
+    all-gather the whole cache (measured 20 TB/step on grok decode_32k);
+    replicated q instead yields flash-decoding: local scores per seq shard
+    + small softmax-stat reductions."""
+    B = x.shape[0]
+    S_max = cache.k.shape[1]
+    pos = cache.length                        # scalar current position
+    q, k_new, v_new = _project_qkv(cfg, p, x)
+    if constrain_fn is not None:
+        q, k_new, v_new = (constrain_fn(t) for t in (q, k_new, v_new))
+    if cfg.rope_theta > 0:
+        posv = jnp.full((B, 1), pos, jnp.int32)
+        q = rope(q, posv, cfg.rope_theta)
+        k_new = rope(k_new, posv, cfg.rope_theta)
+    # rolling write for windowed caches, plain write otherwise
+    slot = jnp.where(window > 0, pos % S_max, jnp.minimum(pos, S_max - 1))
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    # key positions: for a rolling cache, slot i holds position
+    # pos - ((slot - i) mod S_max); for a plain cache, position i.
+    idx = jnp.arange(S_max)
+    if window > 0:
+        k_pos = pos - ((slot - idx) % S_max)
+        valid = (k_pos >= 0) & (k_pos >= pos - window + 1) & (k_pos <= pos)
+    else:
+        k_pos = idx
+        valid = idx <= pos
+    q_pos = jnp.full((B, 1), pos, jnp.int32)
+    bias = _mask_bias(q_pos, jnp.broadcast_to(k_pos, (B, S_max)),
+                      causal=False, window=0,
+                      k_valid=jnp.broadcast_to(valid, (B, S_max)))
+    o = _sdpa(cfg, q, k, v, bias)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, KVCache(k, v, pos + 1)
+
+
+def prefill(cfg: ModelConfig, p, x: Array, positions: Array,
+            cache: KVCache, window: int = 0) -> tuple[Array, KVCache]:
+    """Prefill S tokens into an empty cache and return outputs + cache."""
+    S = x.shape[1]
+    out = attend_full(cfg, p, x, positions, causal=True, window=window)
+    k, v = _project_kv(cfg, p, x)
+    if cfg.rope_theta > 0:
+        k = rope(k, positions, cfg.rope_theta)
+    S_max = cache.k.shape[1]
+    if window > 0 and S > S_max:
+        # ring invariant: slot j holds the key of position p with
+        # p % S_max == j; the last S_max keys land rolled by S % S_max.
+        k, v = k[:, -S_max:], v[:, -S_max:]
+        shift = S % S_max
+        k = jnp.roll(k, shift, axis=1)
+        v = jnp.roll(v, shift, axis=1)
+        kc = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0))
+    else:
+        kc = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0))
+    return out, KVCache(kc, vc, jnp.asarray(S, jnp.int32))

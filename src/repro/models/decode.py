@@ -1,0 +1,390 @@
+"""Serving path: per-family decode caches, prefill, and one-token decode.
+
+`init_cache_abstract` builds ShapeDtypeStruct caches so the dry-run can
+lower `serve_step` against a seq_len-sized cache without allocating it.
+Cache memory classes (DESIGN.md shape-cell notes):
+  dense/vlm/moe : O(S) KV cache            (long_500k skipped)
+  encdec        : O(S) self + O(1500) cross
+  ssm           : O(1) state               (long_500k runs)
+  hybrid        : O(1) LRU + O(window) KV  (long_500k runs)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru, ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# cache construction
+
+
+def init_cache(model: Model, batch: int, max_len: int, concrete=True):
+    cfg = model.cfg
+    zeros = jnp.zeros if concrete else jax.ShapeDtypeStruct
+
+    def mk(shape, dtype):
+        return (jnp.zeros(shape, dtype) if concrete
+                else jax.ShapeDtypeStruct(shape, dtype))
+
+    def kv(n_layers, length):
+        Kv, Dh = cfg.eff_kv_heads, cfg.resolved_head_dim
+        shape = (n_layers, batch, length, Kv, Dh)
+        return {"k": mk(shape, cfg.jnp_dtype), "v": mk(shape, cfg.jnp_dtype)}
+
+    cache: Dict[str, Any] = {"length": mk((), jnp.int32)}
+    if cfg.family in ("dense", "vlm"):
+        cache["kv"] = kv(cfg.n_layers, max_len)
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - (1 if cfg.moe.first_layer_dense else 0)
+        cache["kv"] = kv(n_moe, max_len)
+        if cfg.moe.first_layer_dense:
+            cache["kv0"] = kv(1, max_len)
+    elif cfg.family == "ssm":
+        Di = cfg.ssm.expand * cfg.d_model
+        N, Kc = cfg.ssm.d_state, cfg.ssm.d_conv
+        cache["h"] = mk((cfg.n_layers, batch, Di, N), jnp.float32)
+        cache["conv"] = mk((cfg.n_layers, batch, Kc - 1, Di), cfg.jnp_dtype)
+    elif cfg.family == "hybrid":
+        W = cfg.hybrid.lru_width or cfg.d_model
+        Kc = cfg.hybrid.conv_width
+        nt = cfg.n_layers // 3
+        rem = cfg.n_layers - 3 * nt
+        wlen = min(max_len, cfg.hybrid.window)
+        for i in (1, 2):
+            cache[f"lru{i}_h"] = mk((nt, batch, W), jnp.float32)
+            cache[f"lru{i}_conv"] = mk((nt, batch, Kc - 1, W), cfg.jnp_dtype)
+        cache["kv"] = kv(nt, wlen)
+        for i in range(rem):
+            cache[f"tail{i}_h"] = mk((batch, W), jnp.float32)
+            cache[f"tail{i}_conv"] = mk((batch, Kc - 1, W), cfg.jnp_dtype)
+    elif cfg.family == "encdec":
+        cache["kv"] = kv(cfg.n_layers, max_len)                  # self
+        fr = cfg.encdec.encoder_frames
+        cache["cross"] = kv(cfg.n_layers, fr)                    # cross k/v
+    else:
+        raise ValueError(cfg.family)
+    return cache
+
+
+# --------------------------------------------------------------------------
+# one-token decode
+
+
+def _layer_kv(cache_kv, i=None):
+    """Make a per-layer attn.KVCache view (used inside scan, i is None)."""
+    return attn.KVCache(cache_kv["k"], cache_kv["v"], cache_kv["length"])
+
+
+def decode_step(model: Model, params, cache, tokens: Array) -> tuple:
+    """tokens: (B, 1) int32 -> (logits (B, 1, V), new cache)."""
+    cfg = model.cfg
+    x = L.apply_embed(cfg, params["embed"], tokens)
+    x = model._constrain(x, "batch", None, "embed_act")
+    length = cache["length"]
+    # flash-decoding guard for seq-sharded caches (see attn.decode_step):
+    # only needed when kv heads cannot shard over the model axis.
+    m_sz = model.mesh.shape.get("model", 1)
+    kv_shardable = m_sz <= 1 or cfg.eff_kv_heads % m_sz == 0
+    qrep = (None if kv_shardable else
+            (lambda t: model._constrain(t, "batch", None, None, None)))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        window = cfg.attn_window
+
+        def body(h, xs):
+            p, k_l, v_l = xs
+            kvc = attn.KVCache(k_l, v_l, length)
+            a, kvc = attn.decode_step(
+                cfg, p["attn"], L.apply_norm(cfg, p["norm1"], h), kvc,
+                window=window, constrain_fn=qrep)
+            h = h + a
+            hn = L.apply_norm(cfg, p["norm2"], h)
+            if cfg.family == "moe":
+                f = moe_mod.apply_moe_dense(cfg, p["moe"], hn)
+            else:
+                f = L.apply_mlp(cfg, p["mlp"], hn)
+            return h + f, (kvc.k, kvc.v)
+
+        if cfg.family == "moe" and cfg.moe.first_layer_dense:
+            kv0 = attn.KVCache(cache["kv0"]["k"][0], cache["kv0"]["v"][0],
+                               length)
+            a, kv0 = attn.decode_step(
+                cfg, params["layer0"]["attn"],
+                L.apply_norm(cfg, params["layer0"]["norm1"], x), kv0,
+                constrain_fn=qrep)
+            x = x + a
+            hn = L.apply_norm(cfg, params["layer0"]["norm2"], x)
+            x = x + L.apply_mlp(cfg, params["layer0"]["mlp"], hn)
+            cache = dict(cache)
+            cache["kv0"] = {"k": kv0.k[None], "v": kv0.v[None]}
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["kv"]["k"], cache["kv"]["v"]))
+        new_cache = dict(cache)
+        new_cache["kv"] = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            p, h_l, conv_l = xs
+            st = ssm_mod.SSMState(h_l, conv_l, length)
+            out, st = ssm_mod.ssm_decode_step(
+                cfg, p["ssm"], L.apply_norm(cfg, p["norm"], h), st)
+            return h + out, (st.h, st.conv)
+
+        x, (hs, convs) = jax.lax.scan(
+            body, x, (params["layers"], cache["h"], cache["conv"]))
+        new_cache = dict(cache)
+        new_cache["h"], new_cache["conv"] = hs, convs
+
+    elif cfg.family == "hybrid":
+        window = cfg.hybrid.window
+
+        def rec_step(p, h, h_l, conv_l):
+            st = rglru.LRUState(h_l, conv_l, length)
+            a, st = rglru.rglru_decode_step(
+                cfg, p["rec"], L.apply_norm(cfg, p["norm1"], h), st)
+            h = h + a
+            f = L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], h))
+            return h + f, st
+
+        def body(h, xs):
+            p, s1h, s1c, s2h, s2c, k_l, v_l = xs
+            h, st1 = rec_step(p["rec1"], h, s1h, s1c)
+            h, st2 = rec_step(p["rec2"], h, s2h, s2c)
+            kvc = attn.KVCache(k_l, v_l, length)
+            a, kvc = attn.decode_step(
+                cfg, p["attn"]["attn"],
+                L.apply_norm(cfg, p["attn"]["norm1"], h), kvc,
+                window=window, constrain_fn=qrep)
+            h = h + a
+            f = L.apply_mlp(cfg, p["attn"]["mlp"],
+                            L.apply_norm(cfg, p["attn"]["norm2"], h))
+            return h + f, (st1.h, st1.conv, st2.h, st2.conv, kvc.k, kvc.v)
+
+        x, outs = jax.lax.scan(
+            body, x, (params["triples"],
+                      cache["lru1_h"], cache["lru1_conv"],
+                      cache["lru2_h"], cache["lru2_conv"],
+                      cache["kv"]["k"], cache["kv"]["v"]))
+        new_cache = dict(cache)
+        (new_cache["lru1_h"], new_cache["lru1_conv"], new_cache["lru2_h"],
+         new_cache["lru2_conv"], ks, vs) = outs
+        new_cache["kv"] = {"k": ks, "v": vs}
+        i = 0
+        while f"tail_rec{i}" in params:
+            st = rglru.LRUState(cache[f"tail{i}_h"], cache[f"tail{i}_conv"],
+                                length)
+            p = params[f"tail_rec{i}"]
+            a, st = rglru.rglru_decode_step(
+                cfg, p["rec"], L.apply_norm(cfg, p["norm1"], x), st)
+            x = x + a
+            x = x + L.apply_mlp(cfg, p["mlp"],
+                                L.apply_norm(cfg, p["norm2"], x))
+            new_cache[f"tail{i}_h"], new_cache[f"tail{i}_conv"] = st.h, st.conv
+            i += 1
+
+    elif cfg.family == "encdec":
+        # position embedding for the current step (sinusoidal, computed
+        # directly from `length` to stay shape-generic):
+        half = cfg.d_model // 2
+        freqs = jnp.exp(-jnp.arange(half) * (jnp.log(10000.0) / (half - 1)))
+        ang = length.astype(jnp.float32) * freqs
+        pos_e = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+        x = x + pos_e.astype(x.dtype)
+
+        def body(h, xs):
+            p, k_l, v_l, ck_l, cv_l = xs
+            kvc = attn.KVCache(k_l, v_l, length)
+            a, kvc = attn.decode_step(
+                cfg, p["self_attn"], L.apply_norm(cfg, p["norm1"], h), kvc,
+                constrain_fn=qrep)
+            h = h + a
+            # cross attention against the precomputed encoder kv
+            hq = L.apply_norm(cfg, p["norm_x"], h)
+            q = jnp.einsum("bsd,dhk->bshk", hq, p["cross_attn"]["wq"])
+            if "bq" in p["cross_attn"]:
+                q = q + p["cross_attn"]["bq"]
+            bias = jnp.zeros((1, 1, ck_l.shape[1]), jnp.float32)
+            o = attn._sdpa(cfg, q, ck_l, cv_l, bias)
+            h = h + jnp.einsum("bshk,hkd->bsd", o, p["cross_attn"]["wo"])
+            f = L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], h))
+            return h + f, (kvc.k, kvc.v)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["kv"]["k"],
+                      cache["kv"]["v"], cache["cross"]["k"],
+                      cache["cross"]["v"]))
+        new_cache = dict(cache)
+        new_cache["kv"] = {"k": ks, "v": vs}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.apply_unembed(cfg, params["embed"], x)
+    new_cache["length"] = length + 1
+    return model._constrain(logits, "batch", None, "vocab"), new_cache
+
+
+# --------------------------------------------------------------------------
+# prefill (build caches by running the full sequence)
+
+
+def prefill(model: Model, params, batch: Dict[str, Array],
+            max_len: int) -> tuple:
+    """Run the prompt and return (last-position logits, decode cache).
+
+    Implemented for the interactive serving example; the heavy-lowering
+    path for benchmarks is `Model.logits` (prefill cells) and
+    `decode_step` (decode cells).
+    """
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache = init_cache(model, B, max_len)
+    logits = model.logits(params, batch, train=False)
+
+    # rebuild caches by replaying projections layer-by-layer (keeps decode
+    # correctness exactly aligned with training numerics). Dense/moe/encdec
+    # families store rotated keys.
+    x = L.apply_embed(cfg, params["embed"], tokens)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    S = x.shape[1]                       # vlm: patches + text positions
+    positions = jnp.arange(S)
+
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        # re-run hidden states through the stack, capturing k/v per layer
+        pkey = {"dense": "layers", "vlm": "layers", "moe": "layers",
+                "encdec": "dec_layers"}[cfg.family]
+        norm_key = "norm1" if cfg.family != "encdec" else "norm1"
+        attn_key = "attn" if cfg.family != "encdec" else "self_attn"
+        if cfg.family == "encdec":
+            enc_out = model.encode(params, batch["frames"])
+            pos_t = L.sinusoidal_positions(S, cfg.d_model)
+            x = x + pos_t[None].astype(x.dtype)
+
+        def capture(h, p):
+            hn = L.apply_norm(cfg, p[norm_key], h)
+            k, v = attn._project_kv(cfg, p[attn_key], hn)
+            if cfg.rope_theta > 0:
+                from repro.models.layers import rope
+                k = rope(k, positions, cfg.rope_theta)
+            # advance hidden state with the full layer
+            if cfg.family == "moe":
+                h = _apply_full_layer_moe(model, p, h, positions)
+            elif cfg.family == "encdec":
+                h = _apply_full_layer_encdec(model, p, h, positions, enc_out)
+            else:
+                from repro.models.transformer import _apply_dense_layer
+                h = _apply_dense_layer(cfg, p, h, positions, model.mesh,
+                                       window=cfg.attn_window)
+            return h, (k, v)
+
+        h = x
+        if cfg.family == "moe" and cfg.moe.first_layer_dense:
+            p0 = params["layer0"]
+            hn = L.apply_norm(cfg, p0["norm1"], h)
+            k0, v0 = attn._project_kv(cfg, p0["attn"], hn)
+            from repro.models.layers import rope
+            if cfg.rope_theta > 0:
+                k0 = rope(k0, positions, cfg.rope_theta)
+            from repro.models.transformer import _apply_dense_layer
+            h = _apply_dense_layer(cfg, p0, h, positions, model.mesh)
+            cache["kv0"]["k"] = _fit(k0, max_len)[None]
+            cache["kv0"]["v"] = _fit(v0, max_len)[None]
+        _, (ks, vs) = jax.lax.scan(capture, h, params[pkey])
+        cache["kv"]["k"] = jax.vmap(lambda a: _fit(a, max_len))(ks)
+        cache["kv"]["v"] = jax.vmap(lambda a: _fit(a, max_len))(vs)
+        if cfg.family == "encdec":
+            def cross_kv(p):
+                return attn._project_kv(cfg, p["cross_attn"], enc_out)
+            cks, cvs = jax.vmap(cross_kv)(params["dec_layers"])
+            cache["cross"]["k"], cache["cross"]["v"] = cks, cvs
+    elif cfg.family in ("ssm", "hybrid"):
+        # recurrent families: replay with state captured per layer
+        cache = _prefill_recurrent(model, params, x, positions, cache)
+    cache["length"] = jnp.asarray(S, jnp.int32)
+    return logits[:, -1:], cache
+
+
+def _fit(kv: Array, max_len: int) -> Array:
+    """(B, S, Kv, Dh) -> (B, max_len, Kv, Dh) (pad or ring-window)."""
+    B, S = kv.shape[:2]
+    if S == max_len:
+        return kv
+    if S < max_len:
+        pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+        return jnp.pad(kv, pad)
+    kv = kv[:, -max_len:]
+    return jnp.roll(kv, S % max_len, axis=1)
+
+
+def _apply_full_layer_moe(model, p, h, positions):
+    from repro.models.transformer import _apply_moe_layer
+    return _apply_moe_layer(model.cfg, p, h, positions, model.mesh,
+                            model.rules)
+
+
+def _apply_full_layer_encdec(model, p, h, positions, enc_out):
+    cfg = model.cfg
+    a = attn.attend_full(cfg, p["self_attn"],
+                         L.apply_norm(cfg, p["norm1"], h), positions,
+                         causal=True)
+    h = h + a
+    a = attn.attend_full(cfg, p["cross_attn"],
+                         L.apply_norm(cfg, p["norm_x"], h), positions,
+                         causal=False, kv_x=enc_out,
+                         kv_positions=jnp.arange(enc_out.shape[1]))
+    h = h + a
+    return h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], h))
+
+
+def _prefill_recurrent(model, params, x, positions, cache):
+    cfg = model.cfg
+    from repro.models.transformer import _apply_rec_layer, _apply_ssm_layer
+    if cfg.family == "ssm":
+        def body(h, xs):
+            p = xs
+            out, st = _apply_ssm_layer(cfg, p, h)
+            return out, (st.h, st.conv)
+        _, (hs, convs) = jax.lax.scan(body, x, params["layers"])
+        cache["h"], cache["conv"] = hs, convs
+        return cache
+    # hybrid
+    window = cfg.hybrid.window
+    wlen = cache["kv"]["k"].shape[2]
+
+    def body(h, p):
+        h, st1 = _apply_rec_layer(cfg, p["rec1"], h)
+        h, st2 = _apply_rec_layer(cfg, p["rec2"], h)
+        hn = L.apply_norm(cfg, p["attn"]["norm1"], h)
+        k, v = attn._project_kv(cfg, p["attn"]["attn"], hn)
+        if cfg.rope_theta > 0:
+            from repro.models.layers import rope
+            k = rope(k, positions, cfg.rope_theta)
+        from repro.models.transformer import _apply_dense_layer
+        h = _apply_dense_layer(cfg, p["attn"], h, positions, model.mesh,
+                               window=window)
+        return h, (st1.h, st1.conv, st2.h, st2.conv,
+                   _fit(k, wlen), _fit(v, wlen))
+
+    h, outs = jax.lax.scan(body, x, params["triples"])
+    (cache["lru1_h"], cache["lru1_conv"], cache["lru2_h"],
+     cache["lru2_conv"], cache["kv"]["k"], cache["kv"]["v"]) = outs
+    i = 0
+    while f"tail_rec{i}" in params:
+        h, st = _apply_rec_layer(cfg, params[f"tail_rec{i}"], h)
+        cache[f"tail{i}_h"], cache[f"tail{i}_conv"] = st.h, st.conv
+        i += 1
+    return cache

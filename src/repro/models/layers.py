@@ -1,0 +1,179 @@
+"""Shared building blocks: norms, MLPs, RoPE, embeddings.
+
+All modules are (decls, apply) pairs: `*_decls(cfg)` returns a ParamDecl
+tree; `apply_*(params, x, ...)` is the pure function. Compute runs in the
+param dtype with float32 accumulation where it matters (norm statistics,
+softmax, losses).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# --- norms -------------------------------------------------------------------
+
+def rmsnorm_decls(d: int, dtype):
+    return {"scale": sh.ones((d,), ("embed",), dtype)}
+
+
+def apply_rmsnorm(p, x: Array, eps: float, plus_one: bool = False) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    if plus_one:  # gemma convention: weight is a residual around 1
+        scale = scale + 1.0
+    return (y * scale).astype(x.dtype)
+
+
+def layernorm_decls(d: int, dtype):
+    return {"scale": sh.ones((d,), ("embed",), dtype),
+            "bias": sh.zeros((d,), ("embed",), dtype)}
+
+
+def apply_layernorm(p, x: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) +
+            p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_decls(cfg: ModelConfig, d: int = 0):
+    d = d or cfg.d_model
+    if cfg.family == "encdec":   # whisper uses layernorm
+        return layernorm_decls(d, cfg.jnp_dtype)
+    return rmsnorm_decls(d, cfg.jnp_dtype)
+
+
+def apply_norm(cfg: ModelConfig, p, x: Array) -> Array:
+    if cfg.family == "encdec":
+        return apply_layernorm(p, x, cfg.norm_eps)
+    return apply_rmsnorm(p, x, cfg.norm_eps,
+                         plus_one=cfg.name.startswith(("gemma",
+                                                       "recurrentgemma")))
+
+
+# --- MLPs --------------------------------------------------------------------
+
+def mlp_decls(cfg: ModelConfig, d_ff: int = 0, bias: bool = False):
+    d, dt = cfg.d_model, cfg.jnp_dtype
+    f = d_ff or cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        decls = {
+            "w_gate": sh.dense((d, f), ("embed", "ff"), dt),
+            "w_up": sh.dense((d, f), ("embed", "ff"), dt),
+            "w_down": sh.dense((f, d), ("ff", "embed"), dt),
+        }
+    else:  # gelu_mlp (whisper / grok-style 2-matrix)
+        decls = {
+            "w_up": sh.dense((d, f), ("embed", "ff"), dt),
+            "w_down": sh.dense((f, d), ("ff", "embed"), dt),
+        }
+        if bias:
+            decls["b_up"] = sh.zeros((f,), ("ff",), dt)
+            decls["b_down"] = sh.zeros((d,), ("embed",), dt)
+    return decls
+
+
+def apply_mlp(cfg: ModelConfig, p, x: Array) -> Array:
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if cfg.mlp_type == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"], approximate=True) *
+                (x @ p["w_up"])) @ p["w_down"]
+    h = x @ p["w_up"]
+    if "b_up" in p:
+        h = h + p["b_up"]
+    h = jax.nn.gelu(h, approximate=True)
+    out = h @ p["w_down"]
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out
+
+
+# --- embeddings / unembedding -------------------------------------------------
+
+def embed_decls(cfg: ModelConfig):
+    dt = cfg.jnp_dtype
+    Vp = cfg.padded_vocab
+    decls = {"embedding": sh.embedding((Vp, cfg.d_model),
+                                       ("vocab", "embed"), dt)}
+    if not cfg.tie_embeddings:
+        decls["unembed"] = sh.dense((cfg.d_model, Vp), ("embed", "vocab"),
+                                    dt)
+    return decls
+
+
+def apply_embed(cfg: ModelConfig, p, tokens: Array) -> Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def apply_unembed(cfg: ModelConfig, p, x: Array) -> Array:
+    if cfg.tie_embeddings:
+        logits = x @ p["embedding"].T
+    else:
+        logits = x @ p["unembed"]
+    if cfg.padded_vocab != cfg.vocab_size:  # mask the pad logits
+        Vp = cfg.padded_vocab
+        pad_bias = jnp.where(jnp.arange(Vp) < cfg.vocab_size, 0.0, -1e9)
+        logits = logits + pad_bias.astype(logits.dtype)
+    return logits
+
+
+# --- rotary position embeddings -----------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> Array:
+    """Whisper-encoder style fixed sinusoids, (n_pos, d) float32."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half) * (jnp.log(10000.0) / (half - 1)))
+    ang = jnp.arange(n_pos)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --- losses --------------------------------------------------------------------
+
+def softmax_xent(logits: Array, labels: Array, mask: Array | None = None):
+    """Mean next-token cross-entropy in float32. logits (..., V).
+
+    The gold-logit gather is written as a masked reduction over the vocab
+    axis (NOT take_along_axis): with vocab sharded over "model" this
+    partitions to a local select + tiny all-reduce, whereas a gather would
+    force GSPMD to all-gather the full f32 logits (tens of GB at the
+    assigned shapes)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    V = logits.shape[-1]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, (V,), 0)
+    onehot = (labels[..., None] == vocab_iota)
+    gold = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrent block: x -> two linear branches (lru_width); branch 1 gets a
+causal depthwise conv then the Real-Gated LRU
+
+    r_t = sigmoid(W_a x_t + b_a)        (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)        (input gate)
+    a_t = a^(c * r_t) ,  a = sigmoid(Lambda)   (per-channel, c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+branch 2 gets GeLU; outputs multiply then project back. Channelwise
+independent -> lru_width shards over the model axis; decode is O(1) state,
+which is why recurrentgemma runs the long_500k cell (its attention layers
+are local/windowed — O(window) cache).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def rglru_decls(cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.jnp_dtype
+    W = _width(cfg)
+    Kc = cfg.hybrid.conv_width
+    return {
+        "in_x": sh.dense((d, W), ("embed", "lru"), dt),
+        "in_gate": sh.dense((d, W), ("embed", "lru"), dt),
+        "conv_w": sh.dense((Kc, W), ("conv", "lru"), dt, fan_in=Kc),
+        "conv_b": sh.zeros((W,), ("lru",), dt),
+        "w_a": sh.dense((W, W), ("lru", "lru"), dt),
+        "b_a": sh.zeros((W,), ("lru",), jnp.float32),
+        "w_i": sh.dense((W, W), ("lru", "lru"), dt),
+        "b_i": sh.zeros((W,), ("lru",), jnp.float32),
+        # Lambda init so a = sigmoid(L) in ~(0.9, 0.999)
+        "Lambda": sh.const(3.0, (W,), ("lru",), jnp.float32),
+        "out": sh.dense((W, d), ("lru", "embed"), dt),
+    }
+
+
+class LRUState(NamedTuple):
+    h: Array       # (B, W) float32
+    conv: Array    # (B, Kc-1, W)
+    length: Array  # () int32
+
+
+def init_lru_state(cfg: ModelConfig, batch: int, n_layers: int = 0):
+    W = _width(cfg)
+    Kc = cfg.hybrid.conv_width
+    sh_h, sh_c = (batch, W), (batch, Kc - 1, W)
+    if n_layers:
+        sh_h, sh_c = (n_layers,) + sh_h, (n_layers,) + sh_c
+    return LRUState(jnp.zeros(sh_h, jnp.float32),
+                    jnp.zeros(sh_c, cfg.jnp_dtype),
+                    jnp.zeros((), jnp.int32))
+
+
+def _gates(cfg, p, xc: Array):
+    """a_t and gated input for the LRU. xc: (..., W) post-conv."""
+    c = cfg.hybrid.lru_c
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = c * r * jax.nn.log_sigmoid(p["Lambda"])[None]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * xf)
+    return a, gated
+
+
+def apply_rglru_block(cfg: ModelConfig, p, x: Array,
+                      state: LRUState | None = None):
+    """Train/prefill. x: (B, S, D) -> (out, new_state)."""
+    W = _width(cfg)
+    Kc = cfg.hybrid.conv_width
+    B, S, _ = x.shape
+    xb = x @ p["in_x"]
+    gate_branch = jax.nn.gelu(x @ p["in_gate"], approximate=True)
+    prev = (state.conv if state is not None
+            else jnp.zeros((B, Kc - 1, W), x.dtype))
+    xpad = jnp.concatenate([prev, xb], axis=1)
+    ker = p["conv_w"]
+    xc = sum(xpad[:, i:i + S] * ker[i][None, None]
+             for i in range(Kc)) + p["conv_b"].astype(x.dtype)
+
+    a, gated = _gates(cfg, p, xc)                 # (B,S,W) float32
+
+    def comb(u, v):
+        (a1, b1), (a2, b2) = u, v
+        return a2 * a1, a2 * b1 + b2
+
+    if state is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * state.h)
+    _, hs = jax.lax.associative_scan(comb, (a, gated), axis=1)
+    y = (hs.astype(x.dtype) * gate_branch) @ p["out"]
+    new_state = LRUState(hs[:, -1], xpad[:, S:],
+                         (state.length if state is not None else 0) + S)
+    return y, new_state
+
+
+def rglru_decode_step(cfg: ModelConfig, p, x: Array, state: LRUState):
+    """One token. x: (B, 1, D)."""
+    B = x.shape[0]
+    xb = x[:, 0] @ p["in_x"]                      # (B, W)
+    gate_branch = jax.nn.gelu(x[:, 0] @ p["in_gate"], approximate=True)
+    window = jnp.concatenate([state.conv, xb[:, None]], axis=1)
+    xc = jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + \
+        p["conv_b"].astype(x.dtype)
+    a, gated = _gates(cfg, p, xc)                 # (B, W)
+    h = a * state.h + gated
+    y = (h.astype(x.dtype) * gate_branch) @ p["out"]
+    return y[:, None], LRUState(h, window[:, 1:], state.length + 1)

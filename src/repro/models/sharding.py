@@ -1,0 +1,200 @@
+"""Parameter declaration + logical-axis sharding resolution.
+
+Every parameter is declared once with a shape, dtype, init and a tuple of
+*logical* axis names. `ShardingRules` maps logical names to mesh axes;
+`resolve_spec` drops any mapping that does not divide the concrete dim
+(e.g. kv_heads=1 cannot shard 16-ways -> replicated), so one rule set
+serves every architecture and mesh.
+
+Three materializations of a declaration tree:
+  * `init_params(key, tree)`        — concrete arrays (smoke tests, examples)
+  * `abstract_params(tree)`         — jax.ShapeDtypeStruct (dry-run: no alloc)
+  * `spec_tree(tree, rules, mesh)`  — PartitionSpec pytree for pjit shardings
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+Array = jax.Array
+
+# Default logical-axis -> mesh-axis rules (DESIGN.md section 4).
+# "fsdp"-style: the non-tensor-parallel weight dim shards over data.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),        # FSDP dim for 2-D weight sharding
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ff": ("model",),
+    "experts": ("model",),
+    # expert_ff engages only when "experts" could not take the model axis
+    # (E < mesh model size, e.g. grok's 8 experts on a 16-wide axis): the
+    # per-expert FFN then splits along d_ff instead (2-D expert split).
+    "expert_ff": ("model",),
+    "lru": ("model",),         # RG-LRU / mamba inner channels
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "conv": (),
+    "seq": (),
+    "layers": (),              # scan dim, never sharded
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict
+
+    def mesh_axes_for(self, logical: str) -> Tuple[str, ...]:
+        return tuple(self.rules.get(logical, ()))
+
+
+def default_rules(**overrides) -> ShardingRules:
+    r = dict(DEFAULT_RULES)
+    r.update(overrides)
+    return ShardingRules(r)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    dtype: jnp.dtype
+    logical_axes: Tuple[Optional[str], ...]
+    init: Callable[[Array, Tuple[int, ...], jnp.dtype], Array]
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), \
+            (self.shape, self.logical_axes)
+
+
+def _normal_init(stddev: float):
+    def f(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev
+                ).astype(dtype)
+    return f
+
+
+def _zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def dense(shape, logical_axes, dtype=jnp.bfloat16, fan_in: int = None):
+    fi = fan_in if fan_in is not None else shape[0]
+    return ParamDecl(tuple(shape), dtype, tuple(logical_axes),
+                     _normal_init(1.0 / np.sqrt(fi)))
+
+
+def embedding(shape, logical_axes, dtype=jnp.bfloat16):
+    return ParamDecl(tuple(shape), dtype, tuple(logical_axes),
+                     _normal_init(0.02))
+
+
+def zeros(shape, logical_axes, dtype=jnp.bfloat16):
+    return ParamDecl(tuple(shape), dtype, tuple(logical_axes), _zeros_init)
+
+
+def ones(shape, logical_axes, dtype=jnp.bfloat16):
+    return ParamDecl(tuple(shape), dtype, tuple(logical_axes), _ones_init)
+
+
+def const(value: float, shape, logical_axes, dtype=jnp.bfloat16):
+    def f(key, shp, dt):
+        return jnp.full(shp, value, dt)
+    return ParamDecl(tuple(shape), dtype, tuple(logical_axes), f)
+
+
+def stacked(n_layers: int, decl_tree):
+    """Stack a per-layer declaration tree along a leading 'layers' dim
+    (for scan-over-layers)."""
+    def stack_one(d: ParamDecl) -> ParamDecl:
+        return ParamDecl((n_layers,) + d.shape, d.dtype,
+                         ("layers",) + d.logical_axes, d.init)
+    return jax.tree.map(stack_one, decl_tree,
+                        is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def init_params(key: Array, tree):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_decl)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.logical_axes and d.logical_axes[0] == "layers":
+            per_layer = jax.vmap(
+                lambda kk: d.init(kk, d.shape[1:], d.dtype))(
+                    jax.random.split(k, d.shape[0]))
+            out.append(per_layer)
+        else:
+            out.append(d.init(k, d.shape, d.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(tree):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree,
+        is_leaf=is_decl)
+
+
+def resolve_spec(shape: Sequence[int], logical_axes, rules: ShardingRules,
+                 mesh: Mesh) -> P:
+    """Logical axes -> PartitionSpec, dropping non-dividing mesh axes and
+    never using the same mesh axis twice in one spec."""
+    used = set()
+    parts = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            parts.append(None)
+            continue
+        chosen = []
+        prod = 1
+        for ax in rules.mesh_axes_for(name):
+            if ax in used or ax not in mesh.shape:
+                continue
+            sz = mesh.shape[ax]
+            if dim % (prod * sz) == 0:
+                chosen.append(ax)
+                used.add(ax)
+                prod *= sz
+        if not chosen:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(tuple(chosen))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def spec_tree(tree, rules: ShardingRules, mesh: Mesh):
+    return jax.tree.map(
+        lambda d: resolve_spec(d.shape, d.logical_axes, rules, mesh),
+        tree, is_leaf=is_decl)
+
+
+def shard_params(params, specs, mesh: Mesh):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        params, specs)
+
+
+def constrain(x: Array, mesh: Mesh, *logical_axes) -> Array:
+    """with_sharding_constraint through the logical-axis rules."""
+    rules = default_rules()
+    spec = resolve_spec(x.shape, logical_axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

@@ -1,0 +1,165 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+Per layer: in_proj -> (x, z) branches; causal depthwise conv(4) + silu on
+the x branch; input-dependent (Delta, B, C); diagonal selective scan
+
+    h_t = exp(Delta_t A) h_{t-1} + Delta_t B_t x_t ,   y_t = C_t . h_t + D x_t
+
+run as an associative scan over the sequence (log-depth, channelwise
+independent -> d_inner shards cleanly over the model axis). Decode keeps an
+O(1) recurrent state (h, conv tail) — this is why falcon-mamba runs the
+long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, s.d_state, s.d_conv
+
+
+def ssm_decls(cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.jnp_dtype
+    Di, R, N, Kc = _dims(cfg)
+    return {
+        "in_proj": sh.dense((d, 2 * Di), ("embed", "ssm_inner"), dt),
+        "conv_w": sh.dense((Kc, Di), ("conv", "ssm_inner"), dt, fan_in=Kc),
+        "conv_b": sh.zeros((Di,), ("ssm_inner",), dt),
+        "x_proj": sh.dense((Di, R + 2 * N), ("ssm_inner", None), dt),
+        "dt_proj": sh.dense((R, Di), (None, "ssm_inner"), dt, fan_in=R),
+        "dt_bias": sh.zeros((Di,), ("ssm_inner",), dt),
+        # A_log init ~ log(1..N) per mamba; keep simple uniform-ish
+        "A_log": sh.const(0.5, (Di, N), ("ssm_inner", "ssm_state"),
+                          jnp.float32),
+        "D": sh.ones((Di,), ("ssm_inner",), jnp.float32),
+        "out_proj": sh.dense((Di, d), ("ssm_inner", "embed"), dt),
+    }
+
+
+class SSMState(NamedTuple):
+    h: Array         # (B, Di, N) float32 recurrent state
+    conv: Array      # (B, Kc-1, Di) conv tail
+    length: Array    # () int32
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_layers: int = 0):
+    Di, R, N, Kc = _dims(cfg)
+    shape_h = (batch, Di, N)
+    shape_c = (batch, Kc - 1, Di)
+    if n_layers:
+        shape_h = (n_layers,) + shape_h
+        shape_c = (n_layers,) + shape_c
+    return SSMState(jnp.zeros(shape_h, jnp.float32),
+                    jnp.zeros(shape_c, cfg.jnp_dtype),
+                    jnp.zeros((), jnp.int32))
+
+
+def _chunk_size(S: int, target: int = 256) -> int:
+    """Largest divisor of S not exceeding target (bounds scan memory)."""
+    best = 1
+    for c in range(1, min(S, target) + 1):
+        if S % c == 0:
+            best = c
+    return best
+
+
+def _ssm_core(cfg, p, xb: Array, h0: Array | None):
+    """xb: (B, S, Di) post-conv activations -> (y (B,S,Di), h_last).
+
+    Chunked scan: the (B, ck, Di, N) discretized-state tensor only ever
+    exists for one chunk (lax.scan over chunks carries h), so peak memory
+    is O(B * ck * Di * N) instead of O(B * S * Di * N).
+    """
+    Di, R, N, _ = _dims(cfg)
+    B, S, _ = xb.shape
+    xf = xb.astype(jnp.float32)
+    dbc = xb @ p["x_proj"]                                   # (B,S,R+2N)
+    dt_in, Bm, Cm = jnp.split(dbc.astype(jnp.float32), [R, R + N], axis=-1)
+    delta = jax.nn.softplus(dt_in @ p["dt_proj"].astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))  # (B,S,Di)
+    A = -jnp.exp(p["A_log"])                                 # (Di,N) negative
+
+    ck = _chunk_size(S)
+    nc = S // ck
+
+    def to_chunks(t):  # (B, S, ...) -> (nc, B, ck, ...)
+        return jnp.moveaxis(t.reshape(B, nc, ck, *t.shape[2:]), 1, 0)
+
+    def comb(a, b):
+        (A1, b1), (A2, b2) = a, b
+        return A2 * A1, A2 * b1 + b2
+
+    def step(h, inp):
+        d_c, B_c, C_c, x_c = inp                 # (B,ck,Di) / (B,ck,N) x2
+        Abar = jnp.exp(d_c[..., None] * A[None, None])       # (B,ck,Di,N)
+        Bx = (d_c * x_c)[..., None] * B_c[:, :, None, :]
+        Bx = Bx.at[:, 0].add(Abar[:, 0] * h)
+        _, hs = jax.lax.associative_scan(comb, (Abar, Bx), axis=1)
+        y_c = jnp.einsum("bsdn,bsn->bsd", hs, C_c)           # (B,ck,Di)
+        return hs[:, -1], y_c
+
+    h_init = (h0 if h0 is not None
+              else jnp.zeros((B, Di, N), jnp.float32))
+    h_last, ys = jax.lax.scan(
+        step, h_init, (to_chunks(delta), to_chunks(Bm), to_chunks(Cm),
+                       to_chunks(xf)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, Di)
+    y = y + xf * p["D"][None, None]
+    return y.astype(xb.dtype), h_last
+
+
+def apply_ssm_block(cfg: ModelConfig, p, x: Array,
+                    state: SSMState | None = None):
+    """Full mamba block, train/prefill. x: (B, S, D)."""
+    Di, R, N, Kc = _dims(cfg)
+    B, S, _ = x.shape
+    xz = x @ p["in_proj"]                                    # (B,S,2Di)
+    xb, zb = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv along S
+    prev = (state.conv if state is not None
+            else jnp.zeros((B, Kc - 1, Di), x.dtype))
+    xpad = jnp.concatenate([prev, xb], axis=1)               # (B,S+Kc-1,Di)
+    ker = p["conv_w"]                                        # (Kc, Di)
+    xc = sum(xpad[:, i:i + S] * ker[i][None, None]
+             for i in range(Kc)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    h0 = state.h if state is not None else None
+    y, h_last = _ssm_core(cfg, p, xc, h0)
+    out = (y * jax.nn.silu(zb)) @ p["out_proj"]
+    new_state = SSMState(h_last, xpad[:, S:S + Kc - 1 if Kc > 1 else 0],
+                         (state.length if state is not None else 0) + S)
+    return out, new_state
+
+
+def ssm_decode_step(cfg: ModelConfig, p, x: Array, state: SSMState):
+    """One-token decode with O(1) state. x: (B, 1, D)."""
+    Di, R, N, Kc = _dims(cfg)
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]                              # (B, 2Di)
+    xb, zb = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state.conv, xb[:, None]], axis=1)  # (B,Kc,Di)
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    xf = xc.astype(jnp.float32)
+    dbc = xc @ p["x_proj"]
+    dt_in, Bm, Cm = jnp.split(dbc.astype(jnp.float32), [R, R + N], axis=-1)
+    delta = jax.nn.softplus(dt_in @ p["dt_proj"].astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))  # (B,Di)
+    A = -jnp.exp(p["A_log"])
+    Abar = jnp.exp(delta[..., None] * A[None])               # (B,Di,N)
+    h = Abar * state.h + (delta * xf)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + xf * p["D"][None]
+    out = (y.astype(x.dtype) * jax.nn.silu(zb)) @ p["out_proj"]
+    return out[:, None], SSMState(h, window[:, 1:], state.length + 1)

@@ -1,0 +1,311 @@
+"""Model assembly: every assigned family behind one functional API.
+
+  Model(cfg, mesh).decls() / init_params(key) / abstract_params()
+      .param_specs()                      — PartitionSpec tree for pjit
+      .loss_fn(params, batch)             — train loss (scan-over-layers,
+                                            optional remat)
+      .prefill(params, batch)             — build decode caches
+      .decode_step(params, cache, tok)    — one token for the whole batch
+
+Families: dense (yi/qwen/gemma), vlm (pixtral: stubbed patch embeddings
+prepended), moe (deepseek/grok: nested shard_map expert layer), ssm
+(falcon-mamba), hybrid (recurrentgemma: (rec, rec, attn) pattern), encdec
+(whisper: stubbed audio frames -> encoder, causal decoder w/ cross-attn).
+
+Scan-over-layers keeps HLO size O(1) in depth — required for 64-layer
+models to compile quickly on the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru, sharding as sh, ssm as ssm_mod
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# declarations
+
+
+def _dense_layer_decls(cfg: ModelConfig, d_ff: int = 0):
+    return {
+        "norm1": L.norm_decls(cfg),
+        "attn": attn.attn_decls(cfg),
+        "norm2": L.norm_decls(cfg),
+        "mlp": L.mlp_decls(cfg, d_ff=d_ff,
+                           bias=(cfg.family == "encdec")),
+    }
+
+
+def _moe_layer_decls(cfg: ModelConfig):
+    return {
+        "norm1": L.norm_decls(cfg),
+        "attn": attn.attn_decls(cfg),
+        "norm2": L.norm_decls(cfg),
+        "moe": moe_mod.moe_decls(cfg),
+    }
+
+
+def _ssm_layer_decls(cfg: ModelConfig):
+    return {"norm": L.norm_decls(cfg), "ssm": ssm_mod.ssm_decls(cfg)}
+
+
+def _rec_layer_decls(cfg: ModelConfig):
+    return {
+        "norm1": L.norm_decls(cfg),
+        "rec": rglru.rglru_decls(cfg),
+        "norm2": L.norm_decls(cfg),
+        "mlp": L.mlp_decls(cfg),
+    }
+
+
+def _hybrid_triple_decls(cfg: ModelConfig):
+    return {
+        "rec1": _rec_layer_decls(cfg),
+        "rec2": _rec_layer_decls(cfg),
+        "attn": _dense_layer_decls(cfg),
+    }
+
+
+def _encdec_decls(cfg: ModelConfig):
+    ed = cfg.encdec
+    dec_layer = {
+        "norm1": L.norm_decls(cfg),
+        "self_attn": attn.attn_decls(cfg),
+        "norm_x": L.norm_decls(cfg),
+        "cross_attn": attn.attn_decls(cfg),
+        "norm2": L.norm_decls(cfg),
+        "mlp": L.mlp_decls(cfg, bias=True),
+    }
+    enc_layer = _dense_layer_decls(cfg)
+    return {
+        "embed": L.embed_decls(cfg),
+        "enc_layers": sh.stacked(ed.n_encoder_layers, enc_layer),
+        "enc_norm": L.norm_decls(cfg),
+        "dec_layers": sh.stacked(cfg.n_layers, dec_layer),
+        "final_norm": L.norm_decls(cfg),
+    }
+
+
+def lm_decls(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return _encdec_decls(cfg)
+    decls: Dict[str, Any] = {"embed": L.embed_decls(cfg)}
+    if cfg.family in ("dense", "vlm"):
+        decls["layers"] = sh.stacked(cfg.n_layers, _dense_layer_decls(cfg))
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - (1 if cfg.moe.first_layer_dense else 0)
+        if cfg.moe.first_layer_dense:
+            decls["layer0"] = _dense_layer_decls(
+                cfg, d_ff=cfg.moe.d_ff_dense)
+        decls["layers"] = sh.stacked(n_moe, _moe_layer_decls(cfg))
+    elif cfg.family == "ssm":
+        decls["layers"] = sh.stacked(cfg.n_layers, _ssm_layer_decls(cfg))
+    elif cfg.family == "hybrid":
+        n_triples = cfg.n_layers // 3
+        rem = cfg.n_layers - 3 * n_triples
+        decls["triples"] = sh.stacked(n_triples, _hybrid_triple_decls(cfg))
+        for i in range(rem):
+            decls[f"tail_rec{i}"] = _rec_layer_decls(cfg)
+    else:
+        raise ValueError(cfg.family)
+    decls["final_norm"] = L.norm_decls(cfg)
+    return decls
+
+
+# --------------------------------------------------------------------------
+# layer applications
+
+
+def _apply_dense_layer(cfg, p, x, positions, mesh, causal=True, window=0):
+    h = attn.attend_full(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x),
+                         positions, causal=causal, window=window)
+    x = x + h
+    h = L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+    return x + h
+
+
+def _apply_moe_layer(cfg, p, x, positions, mesh, rules):
+    h = attn.attend_full(cfg, p["attn"], L.apply_norm(cfg, p["norm1"], x),
+                         positions, causal=True)
+    x = x + h
+    h = moe_mod.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["norm2"], x),
+                          mesh, rules)
+    return x + h
+
+
+def _apply_ssm_layer(cfg, p, x, state=None):
+    h, new_state = ssm_mod.apply_ssm_block(
+        cfg, p["ssm"], L.apply_norm(cfg, p["norm"], x), state)
+    return x + h, new_state
+
+
+def _apply_rec_layer(cfg, p, x, state=None):
+    h, new_state = rglru.apply_rglru_block(
+        cfg, p["rec"], L.apply_norm(cfg, p["norm1"], x), state)
+    x = x + h
+    h = L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["norm2"], x))
+    return x + h, new_state
+
+
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    mesh: Mesh
+    rules: sh.ShardingRules = dataclasses.field(
+        default_factory=sh.default_rules)
+
+    # -- params ----------------------------------------------------------
+    def decls(self):
+        return lm_decls(self.cfg)
+
+    def init_params(self, key: Array):
+        return sh.init_params(key, self.decls())
+
+    def abstract_params(self):
+        return sh.abstract_params(self.decls())
+
+    def param_specs(self):
+        return sh.spec_tree(self.decls(), self.rules, self.mesh)
+
+    def shard_params(self, params):
+        return sh.shard_params(params, self.param_specs(), self.mesh)
+
+    def _constrain(self, x, *axes):
+        spec = sh.resolve_spec(x.shape, axes, self.rules, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    # -- forward ------------------------------------------------------------
+    def _maybe_remat(self, fn, train: bool):
+        # save-inputs-only: each scanned layer keeps just its (B, S, D)
+        # input; everything else (incl. the f32 norm/attention internals)
+        # is recomputed in the backward pass. The dots-saveable policy was
+        # measured to stack multi-GB f32 per-layer residuals (see
+        # EXPERIMENTS.md section Perf).
+        if train and self.cfg.remat:
+            return jax.checkpoint(fn)
+        return fn
+
+    def backbone(self, params, x: Array, positions: Array,
+                 train: bool = False) -> Array:
+        """x: (B, S, D) embedded inputs -> final hidden states."""
+        cfg, mesh = self.cfg, self.mesh
+        x = self._constrain(x, "batch", None, "embed_act")
+
+        if cfg.family in ("dense", "vlm"):
+            def body(h, p):
+                return (_apply_dense_layer(cfg, p, h, positions, mesh,
+                                           window=cfg.attn_window), None)
+            x, _ = jax.lax.scan(self._maybe_remat(body, train), x,
+                                params["layers"])
+        elif cfg.family == "moe":
+            if cfg.moe.first_layer_dense:
+                x = _apply_dense_layer(cfg, params["layer0"], x, positions,
+                                       mesh)
+
+            def body(h, p):
+                return (_apply_moe_layer(cfg, p, h, positions, mesh,
+                                         self.rules), None)
+            x, _ = jax.lax.scan(self._maybe_remat(body, train), x,
+                                params["layers"])
+        elif cfg.family == "ssm":
+            def body(h, p):
+                out, _ = _apply_ssm_layer(cfg, p, h)
+                return out, None
+            x, _ = jax.lax.scan(self._maybe_remat(body, train), x,
+                                params["layers"])
+        elif cfg.family == "hybrid":
+            window = cfg.hybrid.window
+
+            def body(h, p):
+                h, _ = _apply_rec_layer(cfg, p["rec1"], h)
+                h, _ = _apply_rec_layer(cfg, p["rec2"], h)
+                h = _apply_dense_layer(cfg, p["attn"], h, positions, mesh,
+                                       window=window)
+                return h, None
+            x, _ = jax.lax.scan(self._maybe_remat(body, train), x,
+                                params["triples"])
+            i = 0
+            while f"tail_rec{i}" in params:
+                x, _ = _apply_rec_layer(cfg, params[f"tail_rec{i}"], x)
+                i += 1
+        else:
+            raise ValueError(cfg.family)
+        return L.apply_norm(cfg, params["final_norm"], x)
+
+    def encode(self, params, frames: Array) -> Array:
+        """Whisper encoder over stubbed frame embeddings (B, T_f, D)."""
+        cfg = self.cfg
+        pos = L.sinusoidal_positions(frames.shape[1], cfg.d_model)
+        x = frames + pos[None].astype(frames.dtype)
+        positions = jnp.arange(frames.shape[1])
+
+        def body(h, p):
+            return (_apply_dense_layer(cfg, p, h, positions, self.mesh,
+                                       causal=False), None)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return L.apply_norm(cfg, params["enc_norm"], x)
+
+    def _decode_stack(self, params, x, positions, enc_out, train):
+        """Whisper decoder stack (self-causal + cross)."""
+        cfg = self.cfg
+        enc_pos = jnp.arange(enc_out.shape[1])
+
+        def body(h, p):
+            a = attn.attend_full(cfg, p["self_attn"],
+                                 L.apply_norm(cfg, p["norm1"], h),
+                                 positions, causal=True)
+            h = h + a
+            a = attn.attend_full(cfg, p["cross_attn"],
+                                 L.apply_norm(cfg, p["norm_x"], h),
+                                 positions, causal=False,
+                                 kv_x=enc_out, kv_positions=enc_pos)
+            h = h + a
+            a = L.apply_mlp(cfg, p["mlp"],
+                            L.apply_norm(cfg, p["norm2"], h))
+            return h + a, None
+
+        x, _ = jax.lax.scan(self._maybe_remat(body, train), x,
+                            params["dec_layers"])
+        return L.apply_norm(cfg, params["final_norm"], x)
+
+    def logits(self, params, batch: Dict[str, Array],
+               train: bool = False) -> Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = L.apply_embed(cfg, params["embed"], tokens)
+        if cfg.family == "encdec":
+            enc_out = self.encode(params, batch["frames"])
+            pos = L.sinusoidal_positions(tokens.shape[1], cfg.d_model)
+            x = x + pos[None].astype(x.dtype)
+            positions = jnp.arange(tokens.shape[1])
+            h = self._decode_stack(params, x, positions, enc_out, train)
+        else:
+            if cfg.family == "vlm":
+                x = jnp.concatenate(
+                    [batch["patches"].astype(x.dtype), x], axis=1)
+            positions = jnp.arange(x.shape[1])
+            h = self.backbone(params, x, positions, train=train)
+            # vlm: logits cover the full (patches + text) sequence; the
+            # loss masks out patch positions (see train_batch_specs).
+        out = L.apply_unembed(cfg, params["embed"], h)
+        return self._constrain(out, "batch", None, "vocab")
+
+    def loss_fn(self, params, batch: Dict[str, Array]) -> Array:
+        logits = self.logits(params, batch, train=True)
+        return L.softmax_xent(logits, batch["labels"],
+                              batch.get("loss_mask"))

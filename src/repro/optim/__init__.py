@@ -1,0 +1,7 @@
+"""Optimizer substrate (built from scratch: no optax in this environment)."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+from repro.optim.compression import topk_compress_update
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "linear_warmup_cosine", "topk_compress_update"]

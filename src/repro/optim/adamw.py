@@ -1,0 +1,101 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Optimizer state is kept in float32 regardless of the (bf16) param dtype;
+master-weight copies are optional (`keep_master=True` stores f32 params in
+the state for bit-accurate long runs, at +4 bytes/param).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    keep_master: bool = False
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: Any
+    nu: Any
+    master: Any  # f32 params or None
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    mu = jax.tree.map(f32, params)
+    nu = jax.tree.map(f32, params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if cfg.keep_master else None)
+    return AdamWState(jnp.zeros((), jnp.int32), mu, nu, master)
+
+
+def global_norm(tree) -> Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(params, grads, state: AdamWState, cfg: AdamWConfig,
+                 lr: Optional[Array] = None):
+    """-> (new_params, new_state, metrics)."""
+    lr = cfg.lr if lr is None else lr
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        gf = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m / c1
+        vhat = v / c2
+        base = (master if master is not None else p).astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * base)
+        return new.astype(p.dtype), m, v, new
+
+    if state.master is not None:
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu,
+                           state.master)
+    else:
+        out = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v, None),
+                           params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    master = (jax.tree.map(lambda t: t[3], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+              if cfg.keep_master else None)
+    return new_params, AdamWState(step, mu, nu, master), {
+        "grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+
+
+def adamw_abstract_state(abstract_params, cfg: AdamWConfig) -> AdamWState:
+    """ShapeDtypeStruct state for dry-run lowering (no allocation)."""
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    mu = jax.tree.map(f32, abstract_params)
+    nu = jax.tree.map(f32, abstract_params)
+    master = (jax.tree.map(f32, abstract_params) if cfg.keep_master
+              else None)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), mu, nu, master)

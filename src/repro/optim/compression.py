@@ -1,0 +1,51 @@
+"""Top-k error-feedback gradient compression (DESIGN.md section 4).
+
+For bandwidth-bound data-parallel all-reduces: each step transmits only the
+top-k fraction of gradient entries per leaf; the residual is accumulated
+locally (error feedback, Karimireddy et al. 2019) so the compression error
+is corrected over time rather than lost. PCDN's own collectives are already
+O(P + Q) floats so this applies to the LM trainer path.
+
+The compressed all-reduce is expressed as psum-of-sparse-densified inside
+shard_map; on a real fleet the wire format is (values, indices) — we carry
+the dense masked tensor through XLA (the collective-bytes accounting in
+the roofline counts the ideal 2k floats; see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def topk_mask(x: Array, frac: float) -> Array:
+    """Boolean mask of the top-|frac| fraction of |x| entries."""
+    flat = jnp.abs(x.reshape(-1))
+    k = max(1, int(frac * flat.shape[0]))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh)
+
+
+def topk_compress_update(grads: Any, residual: Any,
+                         frac: float = 0.01) -> Tuple[Any, Any]:
+    """-> (compressed_grads, new_residual). compressed + residual == grads
+    + old residual (mass conservation, property-tested)."""
+    def one(g, r):
+        total = g.astype(jnp.float32) + r
+        mask = topk_mask(total, frac)
+        sent = jnp.where(mask, total, 0.0)
+        return sent.astype(g.dtype), total - sent
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = jax.tree.unflatten(td, [o[0] for o in out])
+    res = jax.tree.unflatten(td, [o[1] for o in out])
+    return comp, res
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0, 1)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (min_frac + (1 - min_frac) * cos)
+    return f
+
+
+def linear_warmup_cosine(base_lr: float, warmup_steps: int,
+                         total_steps: int, min_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1),
+                          min_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return f

@@ -1,0 +1,8 @@
+"""Training/serving substrate: step factories, checkpointing, fault
+tolerance, elastic scaling."""
+from repro.train.steps import make_serve_step, make_train_step
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import FaultTolerantRunner
+
+__all__ = ["make_train_step", "make_serve_step", "CheckpointManager",
+           "FaultTolerantRunner"]

@@ -1,0 +1,149 @@
+"""train_step / serve_step factories — the functions the dry-run lowers.
+
+`make_train_step` returns (step_fn, in_shardings, out_shardings) ready for
+jax.jit; the same artifacts serve the real trainer loop and the
+lower-compile-only dry-run path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import decode as dec
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update)
+
+Array = jax.Array
+
+
+def _fit_axes(dim: int, axes) -> object:
+    """Largest prefix of `axes` whose product divides dim (None if empty).
+    long_500k has global_batch=1 — a 1-sized batch cannot shard over 16
+    devices; it falls back to replicated (the model axes still shard)."""
+    chosen = []
+    prod = 1
+    for a in axes:
+        if dim % (prod * a[1]) == 0:
+            chosen.append(a[0])
+            prod *= a[1]
+    if not chosen:
+        return None
+    return chosen[0] if len(chosen) == 1 else tuple(chosen)
+
+
+def _batch_spec(mesh: Mesh, tree, rules: sh.ShardingRules):
+    """Batch inputs: shard dim 0 over the data-like axes (when divisible)."""
+    daxes = [(a, mesh.shape[a]) for a in ("pod", "data") if a in mesh.shape]
+
+    def spec_for(x):
+        nd = len(x.shape)
+        d0 = _fit_axes(x.shape[0], daxes) if nd else None
+        return P(*([d0] + [None] * (nd - 1)))
+    return jax.tree.map(spec_for, tree)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_specs, keep_master: bool):
+    scalar = P()
+    return AdamWState(
+        step=scalar,
+        mu=param_specs,
+        nu=param_specs,
+        master=param_specs if keep_master else None,
+    )
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    lr_schedule: Optional[Callable] = None):
+    """-> (train_step, param_specs, opt_specs). train_step(params, opt,
+    batch) -> (params, opt, metrics)."""
+    param_specs = model.param_specs()
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, Array]):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        lr = (lr_schedule(opt_state.step) if lr_schedule is not None
+              else opt_cfg.lr)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg, lr)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step, param_specs, opt_state_specs(param_specs,
+                                                    opt_cfg.keep_master)
+
+
+def make_serve_step(model: Model):
+    """-> serve_step(params, cache, tokens) -> (logits, cache).
+
+    One greedy decode step for the whole request batch (the benchmark /
+    dry-run unit for decode_* cells)."""
+    def serve_step(params, cache, tokens):
+        logits, cache = dec.decode_step(model, params, cache, tokens)
+        return logits, cache
+    return serve_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.logits(params, batch, train=False)
+    return prefill_step
+
+
+def cache_specs(model: Model, cache_tree):
+    """Structure-aware decode-cache sharding.
+
+    KV caches (L, B, S, Kv, Dh): batch over the data axes, then kv-heads
+    over "model" when divisible; otherwise the *sequence* dim shards over
+    "model" (flash-decoding-style sequence parallelism — softmax stats are
+    reduced by two small psums, far cheaper than replicating a 32k cache).
+    Recurrent states shard their channel dim over "model".
+    """
+    mesh = model.mesh
+    m = mesh.shape.get("model", 1)
+    daxes = [(a, mesh.shape[a]) for a in ("pod", "data") if a in mesh.shape]
+
+    def dsp(batch):  # data axes only when they divide the batch
+        return _fit_axes(batch, daxes)
+
+    def mod(dim):
+        return "model" if (m > 1 and dim % m == 0) else None
+
+    def kv_spec(x):  # (L, B, S, Kv, Dh)
+        _, B, S, Kv, Dh = x.shape
+        if m > 1 and Kv % m == 0:
+            return P(None, dsp(B), None, "model", None)
+        return P(None, dsp(B), mod(S), None, None)
+
+    def spec_for(path, x):
+        key = path[0].key if hasattr(path[0], "key") else str(path[0])
+        nd = len(x.shape)
+        if nd == 0:
+            return P()
+        if key in ("kv", "kv0", "cross"):
+            return kv_spec(x)
+        if key == "h":                       # ssm (L, B, Di, N)
+            return P(None, dsp(x.shape[1]), mod(x.shape[2]), None)
+        if key == "conv":                    # ssm (L, B, Kc-1, Di)
+            return P(None, dsp(x.shape[1]), None, mod(x.shape[3]))
+        if key.startswith("lru") and key.endswith("_h"):
+            return P(None, dsp(x.shape[1]), mod(x.shape[2]))
+        if key.startswith("lru"):            # (L, B, Kc-1, W)
+            return P(None, dsp(x.shape[1]), None, mod(x.shape[3]))
+        if key.startswith("tail") and key.endswith("_h"):
+            return P(dsp(x.shape[0]), mod(x.shape[1]))
+        if key.startswith("tail"):           # (B, Kc-1, W)
+            return P(dsp(x.shape[0]), None, mod(x.shape[2]))
+        return P(*([dsp(x.shape[0])] + [None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)

@@ -1,0 +1,170 @@
+"""Post-optimization HLO analysis: collective-byte accounting + roofline.
+
+cost_analysis() has no collective numbers, so we parse the compiled
+module's HLO text and sum operand sizes of every communication op
+(all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), attributing bytes to the axis groups found in
+`replica_groups`. Shapes are parsed from the HLO type strings
+(e.g. ``bf16[16,512,128]{...}``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = bf16[2,16,512]{2,1,0:T(8,128)} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}: {v / 1e9:.3f} GB x{self.count_by_kind[k]}"
+                 for k, v in sorted(self.bytes_by_kind.items()) if v]
+        return "; ".join(parts) or "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in the module.
+
+    `-done` ops are skipped so async pairs are counted once (on `-start`).
+    """
+    by_kind: Dict[str, int] = defaultdict(int)
+    by_count: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "-done(" in stripped:
+            continue  # counted at -start
+        hit = None
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in stripped or f" {kind}-start(" in stripped:
+                hit = kind
+                break
+        if hit is None:
+            continue
+        # result type(s) appear between '=' and the op name
+        lhs = stripped.split(f" {hit}")[0]
+        eq = lhs.find("=")
+        if eq < 0:
+            continue
+        type_str = lhs[eq + 1:]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(type_str):
+            if dt in _DTYPE_BYTES:
+                nbytes += _shape_bytes(dt, dims)
+        by_kind[hit] += nbytes
+        by_count[hit] += 1
+    return CollectiveStats(dict(by_kind), dict(by_count))
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e-class constants supplied by the assignment)
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+ICI_LATENCY = 1e-6            # per collective issue (barrier round trip)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    n_chips: int
+    model_flops: float = 0.0
+    coll_count: float = 0.0   # collectives issued per step (latency term)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.n_chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.n_chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.n_chips * ICI_BW)
+
+    @property
+    def t_latency(self) -> float:
+        """Serialized collective-issue latency (dominates when collectives
+        are many and tiny — e.g. sequential Armijo backtracking)."""
+        return self.coll_count * ICI_LATENCY
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective,
+                 "latency": self.t_latency}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """roofline lower bound (max of overlappable terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective,
+                   self.t_latency)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on achievable MFU: useful flops / (chips * peak *
+        roofline step time)."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.n_chips * PEAK_FLOPS_BF16 * t)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_latency_s": self.t_latency,
+            "coll_count": self.coll_count,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }

@@ -1,0 +1,335 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE regardless
+of trip count (verified empirically — see tests/test_hlo_cost.py), which
+undercounts scan-over-layers models by ~n_layers and misses collectives
+inside the loop entirely. This module parses the post-optimization HLO
+text into per-computation costs and walks the call graph multiplying by
+while trip counts (parsed from the loop-condition comparison constant —
+the shape jax.lax.scan always emits).
+
+Per computation we account:
+  * dot_flops    : 2 * prod(result_dims) * prod(contraction_dims)
+  * bytes        : sum over top-level ops of operand + result bytes
+                   (post-fusion top-level ops approximate true HBM traffic)
+  * collectives  : result bytes of all-gather / all-reduce / reduce-scatter
+                   / all-to-all / collective-permute (async pairs counted
+                   once, at -start)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*\),\s*condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+# ops whose operands/results we do NOT count as memory traffic
+_FREE_OPS = ("get-tuple-element", "tuple(", "parameter(", "bitcast(",
+             "after-all(", "constant(", "iota(", "partition-id(",
+             "replica-id(")
+
+
+def _shapes_in(text: str):
+    return [( dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE_RE.findall(text)]
+
+
+def _nbytes(dt: str, dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    while_calls: list = dataclasses.field(default_factory=list)
+    # list of (cond_name, body_name)
+    fusion_calls: list = dataclasses.field(default_factory=list)
+    # deferred fusion memory entries: (callee, result_bytes, operand_bytes)
+    deferred_mem: list = dataclasses.field(default_factory=list)
+    contains_gather: bool = False   # gather/scatter/slice ops inside
+    root_is_dus: bool = False       # ROOT is a dynamic-update-slice
+    max_int_constant: int = 0
+    # attribution: (kind, op_name_metadata) -> flops or bytes
+    dot_sources: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_sources: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+
+def _parse_computations(hlo: str) -> Dict[str, CompCost]:
+    comps: Dict[str, CompCost] = {}
+    shapes: Dict[str, tuple] = {}  # symbol -> (dtype, dims) per computation
+    cur: Optional[CompCost] = None
+    cur_shapes: Dict[str, tuple] = {}
+
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and line.strip().endswith("{"):
+            cur = CompCost()
+            comps[hdr.group(1)] = cur
+            cur_shapes = {}
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        shs = _shapes_in(rhs.split(" ", 1)[0] if rhs.startswith(
+            ("(", "f", "b", "s", "u", "p", "c")) else rhs)
+        # result type = first shape(s) before the op name
+        # take everything before the first '(' that follows the type
+        result_shapes = []
+        # result part is rhs up to the op token; simplest: shapes before op word
+        op_split = re.match(r"^(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([a-z\-]+)",
+                            rhs)
+        if op_split:
+            result_shapes = _shapes_in(op_split.group(1))
+            op = op_split.group(2)
+        else:
+            op = rhs.split("(")[0].strip()
+            result_shapes = _shapes_in(rhs.split(op)[0]) if op else []
+        if result_shapes:
+            # store the first (or tuple sum) for the symbol table
+            cur_shapes[name] = result_shapes
+        rbytes = sum(_nbytes(dt, dims) for dt, dims in result_shapes)
+
+        for c in _CONST_RE.findall(rhs):
+            cur.max_int_constant = max(cur.max_int_constant, int(c))
+
+        wm = _WHILE_RE.search(rhs)
+        if wm:
+            cur.while_calls.append((wm.group(1), wm.group(2)))
+            continue  # while op itself moves no data
+
+        if "gather(" in rhs or "scatter(" in rhs or \
+                "dynamic-slice(" in rhs or "dynamic-update-slice(" in rhs:
+            cur.contains_gather = True
+        if line.strip().startswith("ROOT") and "dynamic-update-slice(" in rhs:
+            cur.root_is_dus = True
+
+        if " fusion(" in f" {rhs}":
+            cm = _CALLS_RE.search(rhs)
+            if cm:
+                # credit dots nested inside the fusion at this call site
+                # (CPU XLA keeps matvecs as dots inside loop fusions)
+                cur.fusion_calls.append(cm.group(1))
+                # defer the memory accounting until the callee's content
+                # is known (gather/DUS-bearing fusions must not count
+                # their giant table/buffer operands as traffic)
+                arg_str = rhs.split("(", 1)[1]
+                obl = []
+                for oname in _OPERAND_RE.findall(arg_str.split(")", 1)[0]):
+                    osh = cur_shapes.get(oname)
+                    if osh:
+                        obl.append(sum(_nbytes(dt, dims)
+                                       for dt, dims in osh))
+                cur.deferred_mem.append((cm.group(1), rbytes, tuple(obl)))
+                continue
+
+        if any(f in rhs for f in _FREE_OPS) and not rhs.startswith("fusion"):
+            # cheap bookkeeping ops — but note constants still recorded above
+            if op in ("get-tuple-element", "tuple", "parameter", "bitcast",
+                      "constant", "iota", "after-all", "partition-id",
+                      "replica-id"):
+                continue
+
+        is_async_done = "-done(" in rhs
+        coll = next((k for k in _COLL_KINDS if f" {k}(" in f" {rhs}" or
+                     f" {k}-start(" in f" {rhs}"), None)
+        if coll and not is_async_done:
+            cur.coll_bytes[coll] += rbytes
+            cur.coll_count[coll] += 1
+            meta = _META_RE.search(rhs)
+            src = meta.group(1) if meta else name
+            cur.coll_sources[f"{coll} | {src}"] += rbytes
+
+        # dot flops
+        if re.search(r"\bdot\(", rhs):
+            lhs_c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+            ops = _OPERAND_RE.findall(rhs.split("(", 1)[1])
+            lhs_name = ops[0] if ops else None
+            lhs_shape = cur_shapes.get(lhs_name)
+            k = 1
+            if lhs_c and lhs_shape:
+                dims = lhs_shape[0][1]
+                for ci in lhs_c.group(1).split(","):
+                    if ci:
+                        k *= dims[int(ci)]
+            result_elems = 0
+            for dt, dims in result_shapes:
+                n = 1
+                for d in dims:
+                    n *= d
+                result_elems += n
+            cur.dot_flops += 2.0 * result_elems * k
+            meta = _META_RE.search(rhs)
+            src = meta.group(1) if meta else name
+            cur.dot_sources[src] += 2.0 * result_elems * k
+        if "convolution(" in rhs:
+            # rough: 2 * result_elems * (kernel_elems per output)
+            result_elems = sum(
+                int(__import__("numpy").prod(dims) if dims else 1)
+                for _, dims in result_shapes)
+            cur.dot_flops += 2.0 * result_elems  # lower bound
+
+        # memory traffic: operands + result. In-place slice updates touch
+        # only the slice: counting the full aliased buffer overstates a
+        # KV-cache decode step by ~1000x (measured) — on TPU a
+        # dynamic-update-slice writes `update` bytes, not the whole cache.
+        if not is_async_done:
+            if "dynamic-update-slice(" in rhs:
+                arg_str = rhs.split("(", 1)[1]
+                ops = _OPERAND_RE.findall(arg_str.split(")", 1)[0])
+                upd = cur_shapes.get(ops[1]) if len(ops) > 1 else None
+                if upd:
+                    cur.bytes += 2 * sum(_nbytes(dt, dims)
+                                         for dt, dims in upd)
+                continue
+            if "dynamic-slice(" in rhs:
+                cur.bytes += 2 * rbytes  # read slice + write result
+                continue
+            if re.search(r"\bgather\(", rhs):
+                cur.bytes += 2 * rbytes  # touched rows only, not the table
+                continue
+            if re.search(r"\bscatter\(", rhs):
+                # read+write the scattered region (~updates operand size)
+                arg_str = rhs.split("(", 1)[1]
+                ops = _OPERAND_RE.findall(arg_str.split(")", 1)[0])
+                upd = cur_shapes.get(ops[-1]) if ops else None
+                if upd:
+                    cur.bytes += 2 * sum(_nbytes(dt, dims)
+                                         for dt, dims in upd)
+                continue
+            obytes = 0
+            arg_str = rhs.split("(", 1)[1] if "(" in rhs else ""
+            for oname in _OPERAND_RE.findall(arg_str.split(")", 1)[0]):
+                osh = cur_shapes.get(oname)
+                if osh:
+                    obytes += sum(_nbytes(dt, dims) for dt, dims in osh)
+            cur.bytes += rbytes + obytes
+    return comps
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float
+    bytes: float
+    coll_bytes: Dict[str, float]
+    coll_count: Dict[str, float]
+    trip_counts: Dict[str, int]
+    dot_sources: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_sources: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    def top_dots(self, k: int = 12):
+        return sorted(self.dot_sources.items(), key=lambda kv: -kv[1])[:k]
+
+    def top_colls(self, k: int = 12):
+        return sorted(self.coll_sources.items(), key=lambda kv: -kv[1])[:k]
+
+
+def _finalize_bytes(comps: Dict[str, CompCost]) -> None:
+    """Resolve deferred fusion memory entries with callee knowledge."""
+    for c in comps.values():
+        for callee, rbytes, obl in c.deferred_mem:
+            fc = comps.get(callee)
+            if fc is not None and fc.root_is_dus:
+                # in-place update: count only the small (update) operands
+                c.bytes += 2 * sum(b for b in obl if b < 0.5 * rbytes)
+            elif fc is not None and fc.contains_gather:
+                # gather-style: touched rows ~= result; exclude the table
+                c.bytes += 2 * rbytes + sum(b for b in obl
+                                            if b <= 4 * rbytes)
+            else:
+                c.bytes += rbytes + sum(obl)
+        c.deferred_mem = []
+
+
+def analyze(hlo: str, entry: Optional[str] = None) -> ModuleCost:
+    comps = _parse_computations(hlo)
+    _finalize_bytes(comps)
+    # entry = computation named in "ENTRY %name" line
+    if entry is None:
+        m = re.search(r"ENTRY\s+%([\w.\-]+)", hlo)
+        entry = m.group(1) if m else max(
+            comps, key=lambda k: comps[k].dot_flops)
+
+    # fusion sub-computations are already represented by their call sites'
+    # top-level fusion op; exclude them from the walk by only following
+    # while calls from each computation.
+    flops = 0.0
+    bytes_ = 0.0
+    coll_b: Dict[str, float] = defaultdict(float)
+    coll_c: Dict[str, float] = defaultdict(float)
+    trips: Dict[str, int] = {}
+    dot_src: Dict[str, float] = defaultdict(float)
+    coll_src: Dict[str, float] = defaultdict(float)
+
+    def walk(name: str, mult: float, depth=0):
+        nonlocal flops, bytes_
+        c = comps.get(name)
+        if c is None or depth > 32:
+            return
+        flops += mult * c.dot_flops
+        bytes_ += mult * c.bytes
+        for k, v in c.coll_bytes.items():
+            coll_b[k] += mult * v
+            coll_c[k] += mult * c.coll_count[k]
+        for k, v in c.dot_sources.items():
+            dot_src[k] += mult * v
+        for k, v in c.coll_sources.items():
+            coll_src[k] += mult * v
+        for fname in c.fusion_calls:
+            fc = comps.get(fname)
+            if fc is not None and fc.dot_flops:
+                flops += mult * fc.dot_flops
+                for k, v in fc.dot_sources.items():
+                    dot_src[k] += mult * v
+        for cond, body in c.while_calls:
+            trip = max(comps.get(cond, CompCost()).max_int_constant, 1)
+            trips[body] = trip
+            walk(body, mult * trip, depth + 1)
+            walk(cond, mult * (trip + 1), depth + 1)
+
+    walk(entry, 1.0)
+    return ModuleCost(flops=flops, bytes=bytes_, coll_bytes=dict(coll_b),
+                      coll_count=dict(coll_c), trip_counts=trips,
+                      dot_sources=dict(dot_src), coll_sources=dict(coll_src))

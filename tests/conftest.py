@@ -1,0 +1,10 @@
+"""Pytest config. NOTE: no XLA device-count flag here — smoke tests and
+benches must see 1 device (the 512-device override lives ONLY in
+launch/dryrun.py and subprocess-based sharding tests)."""
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device subprocess tests (deselect with "
+        "-m 'not slow')")

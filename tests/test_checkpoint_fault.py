@@ -1,0 +1,148 @@
+"""Checkpoint manager + fault-tolerant runner tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import (FaultTolerantRunner, RunnerConfig,
+                                         StepFailure)
+
+
+def tree_eq(a, b):
+    return all(bool(jnp.all(x == y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.fixture()
+def state():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "opt": {"mu": jnp.ones((3, 4)) * 0.5,
+                    "step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path, state):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(3, state)
+    step, restored = cm.restore(state)
+    assert step == 3
+    assert tree_eq(state, restored)
+
+
+def test_incomplete_checkpoint_ignored(tmp_path, state):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, state)
+    # simulate a crashed writer: step dir without COMMITTED
+    bad = os.path.join(str(tmp_path), "step_00000009")
+    os.makedirs(bad)
+    assert cm.latest_step() == 1
+
+
+def test_gc_keeps_newest(tmp_path, state):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        cm.save(s, state)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(str(tmp_path))
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_restore_casts_dtype(tmp_path, state):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, state)
+    like = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float16)
+                        if x.dtype == jnp.float32 else x, state)
+    _, restored = cm.restore(like)
+    assert restored["w"].dtype == jnp.float16
+
+
+# -- fault-tolerant runner ----------------------------------------------------
+
+def make_step():
+    def step(state, idx):
+        w = state["w"] + idx + 1
+        return {"w": w}, {"loss": float(jnp.sum(w))}
+    return step
+
+
+def expected_after(n):
+    w = 0.0
+    for i in range(n):
+        w += i + 1
+    return w
+
+
+def test_runner_no_faults(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    r = FaultTolerantRunner(make_step(), {"w": jnp.zeros(())}, cm,
+                            RunnerConfig(ckpt_every=3))
+    r.run(7)
+    assert float(r.state["w"]) == expected_after(7)
+
+
+def test_runner_crash_recovery_deterministic(tmp_path):
+    """A crash mid-run restores the checkpoint and converges to the exact
+    fault-free state (steps are pure functions of (state, idx))."""
+    cm = CheckpointManager(str(tmp_path))
+    crashed = {"done": False}
+
+    def inject(step, attempt):
+        if step == 5 and attempt == 0 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected device loss")
+
+    r = FaultTolerantRunner(make_step(), {"w": jnp.zeros(())}, cm,
+                            RunnerConfig(ckpt_every=2),
+                            inject_fault=inject)
+    r.run(8)
+    assert float(r.state["w"]) == expected_after(8)
+    kinds = [e["kind"] for e in r.events]
+    assert "crash" in kinds and "restore" in kinds
+
+
+def test_runner_resume_from_disk(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    r1 = FaultTolerantRunner(make_step(), {"w": jnp.zeros(())}, cm,
+                             RunnerConfig(ckpt_every=2))
+    r1.run(4)  # final save at step 4
+    # brand-new runner (process restart) resumes from step 4
+    r2 = FaultTolerantRunner(make_step(), {"w": jnp.zeros(())}, cm,
+                             RunnerConfig(ckpt_every=2))
+    assert r2.start_step == 4
+    r2.run(4)
+    assert float(r2.state["w"]) == expected_after(8)
+
+
+def test_straggler_reissue(tmp_path):
+    """A step exceeding the deadline is re-issued and succeeds."""
+    import time as _t
+    cm = CheckpointManager(str(tmp_path))
+    slow = {"hit": False}
+
+    def step(state, idx):
+        if idx == 6 and not slow["hit"]:
+            slow["hit"] = True
+            _t.sleep(0.6)
+        return {"w": state["w"] + idx + 1}, {}
+
+    r = FaultTolerantRunner(
+        step, {"w": jnp.zeros(())}, cm,
+        RunnerConfig(ckpt_every=100, straggler_factor=3.0,
+                     min_deadline_s=0.3, warmup_steps=2))
+    r.run(8)
+    assert float(r.state["w"]) == expected_after(8)
+    assert any(e["kind"] == "straggler" for e in r.events)
+
+
+def test_runner_gives_up_after_retries(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+
+    def bad_step(state, idx):
+        raise RuntimeError("always broken")
+
+    r = FaultTolerantRunner(bad_step, {"w": jnp.zeros(())}, cm,
+                            RunnerConfig(max_retries_per_step=2))
+    with pytest.raises(StepFailure):
+        r.run(1)

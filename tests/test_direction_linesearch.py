@@ -1,0 +1,95 @@
+"""Unit + property tests: Eq. 5 closed form, Armijo variants (Eq. 6/11)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.direction import newton_direction, delta_decrement
+from repro.core.linesearch import (ArmijoParams, armijo_backtracking,
+                                   armijo_batched, candidate_alphas,
+                                   objective_delta)
+from repro.core.losses import get_loss
+from repro.core.problem import make_problem
+from repro.data import make_classification
+
+
+# -- Eq. 5 is the argmin of the 1-D subproblem (Eq. 4) ------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-5, 5), st.floats(0.01, 10), st.floats(-3, 3))
+def test_newton_direction_is_argmin(g, h, w):
+    d = float(newton_direction(jnp.float32(g), jnp.float32(h),
+                               jnp.float32(w))[()])
+
+    def obj(dd):
+        return g * dd + 0.5 * h * dd * dd + abs(w + dd)
+
+    # compare against a fine grid around the candidate
+    grid = np.linspace(d - 2.0, d + 2.0, 4001)
+    vals = [obj(x) for x in grid]
+    assert obj(d) <= min(vals) + 1e-4
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-5, 5), st.floats(0.01, 10), st.floats(-3, 3))
+def test_newton_direction_subgradient_optimality(g, h, w):
+    """0 in subdifferential of the subproblem at d*."""
+    d = float(newton_direction(jnp.float32(g), jnp.float32(h),
+                               jnp.float32(w))[()])
+    slope = g + h * d
+    wd = w + d
+    if abs(wd) > 1e-6:
+        assert abs(slope + np.sign(wd)) < 1e-3
+    else:
+        assert abs(slope) <= 1 + 1e-3
+
+
+# -- line-search variants select the same alpha --------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from(["logistic", "squared_hinge"]))
+def test_backtracking_equals_batched(seed, loss_name):
+    X, y, _ = make_classification(80, 30, sparsity=0.4, seed=seed % 50)
+    prob = make_problem(X, y, c=1.0, loss=loss_name)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal(30) * 0.3, jnp.float32)
+    z = prob.margins(w)
+    idx = jnp.arange(10)
+    XB = prob.X[:, :10]
+    w_B = w[:10]
+    g, h = prob.bundle_grad_hess(z, XB, w_B)
+    d = newton_direction(g, h, w_B)
+    Delta = delta_decrement(g, h, w_B, d, 0.0)
+    delta_z = XB @ d
+    ap = ArmijoParams()
+    loss = get_loss(loss_name)
+    r1 = armijo_backtracking(loss, 1.0, z, delta_z, prob.y, w_B, d, Delta,
+                             ap)
+    r2 = armijo_batched(loss, 1.0, z, delta_z, prob.y, w_B, d, Delta, ap)
+    assert bool(r1.accepted) == bool(r2.accepted)
+    if bool(r1.accepted):
+        assert abs(float(r1.alpha) - float(r2.alpha)) < 1e-7
+        assert int(r1.n_steps) == int(r2.n_steps)
+
+
+def test_accepted_alpha_satisfies_armijo():
+    X, y, _ = make_classification(100, 40, sparsity=0.3, seed=9)
+    prob = make_problem(X, y, c=2.0)
+    w = jnp.zeros(40, jnp.float32)
+    z = prob.margins(w)
+    XB = prob.X
+    g, h = prob.bundle_grad_hess(z, XB, w)
+    d = newton_direction(g, h, w)
+    Delta = delta_decrement(g, h, w, d, 0.0)
+    ap = ArmijoParams()
+    res = armijo_batched(prob.loss, 2.0, z, XB @ d, prob.y, w, d, Delta, ap)
+    assert bool(res.accepted)
+    fd = objective_delta(prob.loss, 2.0, z, XB @ d, prob.y, w, d, res.alpha)
+    assert float(fd) <= ap.sigma * float(res.alpha) * float(Delta) + 1e-5
+
+
+def test_candidate_alphas_geometry():
+    ap = ArmijoParams(beta=0.5, max_steps=10)
+    a = np.asarray(candidate_alphas(ap))
+    assert a[0] == 1.0
+    assert np.allclose(a[1:] / a[:-1], 0.5)

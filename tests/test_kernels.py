@@ -1,0 +1,105 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32, positive=False):
+    a = RNG.standard_normal(shape)
+    if positive:
+        a = np.abs(a) + 0.01
+    return jnp.asarray(a, dtype)
+
+
+# -- pcdn_direction -----------------------------------------------------------
+
+@pytest.mark.parametrize("s,P", [(64, 8), (512, 128), (1000, 37), (77, 5),
+                                 (2048, 256), (33, 130)])
+@pytest.mark.parametrize("l2", [0.0, 0.3])
+def test_pcdn_direction_shapes(s, P, l2):
+    XB = _arr((s, P))
+    u = _arr((s,))
+    v = _arr((s,), positive=True)
+    w = _arr((P,))
+    d1, g1, h1 = ops.pcdn_direction(XB, u, v, w, l2=l2)
+    d2, g2, h2 = ref.pcdn_direction_ref(XB, u, v, w, l2=l2)
+    np.testing.assert_allclose(g1, g2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h1, h2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(d1, d2, rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pcdn_direction_dtypes(dtype):
+    XB = _arr((256, 64), dtype)
+    u = _arr((256,), dtype)
+    v = _arr((256,), dtype, positive=True)
+    w = _arr((64,), dtype)
+    d1, g1, h1 = ops.pcdn_direction(XB, u, v, w)
+    d2, g2, h2 = ref.pcdn_direction_ref(XB.astype(jnp.float32),
+                                        u.astype(jnp.float32),
+                                        v.astype(jnp.float32),
+                                        w.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(d1, d2, rtol=tol, atol=tol)
+
+
+# -- pcdn_linesearch ----------------------------------------------------------
+
+@pytest.mark.parametrize("s", [64, 1000, 4096, 33])
+@pytest.mark.parametrize("kind", ["logistic", "squared_hinge", "squared"])
+def test_pcdn_linesearch_sweep(s, kind):
+    z = _arr((s,))
+    delta = _arr((s,))
+    y = jnp.sign(_arr((s,))) if kind != "squared" else _arr((s,))
+    alphas = jnp.asarray(0.5 ** np.arange(24), jnp.float32)
+    o1 = ops.pcdn_linesearch(z, delta, y, alphas, kind=kind)
+    o2 = ref.pcdn_linesearch_ref(z, delta, y, alphas, kind=kind)
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-3)
+
+
+# -- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("BH,Sq,Skv,D",
+                         [(4, 128, 128, 64), (2, 256, 512, 128),
+                          (1, 384, 384, 256), (3, 128, 256, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(BH, Sq, Skv, D, causal):
+    q = _arr((BH, Sq, D))
+    k = _arr((BH, Skv, D))
+    v = _arr((BH, Skv, D))
+    o1 = ops.flash_attention(q, k, v, causal)
+    o2 = ref.attention_ref(q, k, v, causal)
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = _arr((2, 128, 64), jnp.bfloat16)
+    k = _arr((2, 128, 64), jnp.bfloat16)
+    v = _arr((2, 128, 64), jnp.bfloat16)
+    o1 = ops.flash_attention(q, k, v, True)
+    o2 = ref.attention_ref(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_grad_matches_ref():
+    q = _arr((2, 128, 64))
+    k = _arr((2, 128, 64))
+    v = _arr((2, 128, 64))
+
+    def f1(q, k, v):
+        return (ops.flash_attention(q, k, v, True) ** 2).sum()
+
+    def f2(q, k, v):
+        return (ref.attention_ref(q, k, v, True) ** 2).sum()
+
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,77 @@
+"""End-to-end behaviour tests: the paper's full pipeline on synthetic data.
+
+Covers: PCDN convergence + monotone descent at extreme parallelism (the
+paper's core claim), solver agreement at the optimum (PCDN = CDN = TRON),
+and SCDN's divergence under correlation.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (PCDNConfig, cdn_config, make_problem, scdn, solve,
+                        tron)
+from repro.core.scdn import SCDNConfig
+from repro.data import make_classification
+
+
+@pytest.fixture(scope="module")
+def problem():
+    X, y, _ = make_classification(400, 160, sparsity=0.7, corr=0.4, seed=7)
+    return make_problem(X, y, c=1.0, loss="logistic")
+
+
+def test_pcdn_converges_and_is_monotone(problem):
+    res = solve(problem, PCDNConfig(P=32, max_outer=150, tol_kkt=1e-3))
+    assert res.converged
+    diffs = np.diff(res.history.objective)
+    assert np.all(diffs <= 1e-4), "objective must be nonincreasing (Lemma 1c)"
+
+
+def test_full_parallelism_still_converges(problem):
+    """P = n: maximal parallelism, guaranteed convergence (Thm 3 / A.5)."""
+    n = problem.n_features
+    res = solve(problem, PCDNConfig(P=n, max_outer=300, tol_kkt=1e-3))
+    assert res.converged
+    assert np.all(np.diff(res.history.objective) <= 1e-4)
+
+
+def test_solver_agreement_at_optimum(problem):
+    """PCDN, CDN and TRON all minimize the same objective."""
+    f_pcdn = solve(problem, PCDNConfig(P=16, max_outer=200,
+                                       tol_kkt=1e-4)).objective
+    f_cdn = solve(problem, cdn_config(max_outer=200, tol_kkt=1e-4)).objective
+    f_tron = tron.solve(problem,
+                        tron.TRONConfig(tol_kkt=1e-4)).objective
+    assert abs(f_pcdn - f_cdn) / abs(f_cdn) < 1e-4
+    assert abs(f_pcdn - f_tron) / abs(f_tron) < 1e-4
+
+
+def test_svm_loss_end_to_end(problem):
+    prob = make_problem(np.asarray(problem.X), np.asarray(problem.y),
+                        c=0.5, loss="squared_hinge")
+    res = solve(prob, PCDNConfig(P=32, max_outer=200, tol_kkt=1e-2))
+    assert res.converged
+    assert np.all(np.diff(res.history.objective) <= 1e-3)
+
+
+def test_scdn_diverges_under_correlation_pcdn_does_not():
+    """Reproduces the paper's core comparison (section 2.2 / 5.3)."""
+    X, y, _ = make_classification(300, 200, sparsity=0.0, corr=0.95,
+                                  seed=2, row_normalize=False)
+    prob = make_problem(X, y, c=1.0)
+    r_scdn = scdn.solve(prob, SCDNConfig(P_bar=64, max_rounds=30))
+    assert r_scdn.diverged
+    r_pcdn = solve(prob, PCDNConfig(P=64, max_outer=30))
+    assert np.all(np.diff(r_pcdn.history.objective) <= 1e-3)
+
+
+def test_sparse_solution_recovered(problem):
+    res = solve(problem, PCDNConfig(P=32, max_outer=150, tol_kkt=1e-3))
+    nnz = int(res.history.nnz[-1])
+    assert 0 < nnz < problem.n_features, "l1 must induce sparsity"
+
+
+def test_elastic_net_extension(problem):
+    prob = make_problem(np.asarray(problem.X), np.asarray(problem.y),
+                        c=1.0, elastic_net_l2=0.5)
+    res = solve(prob, PCDNConfig(P=32, max_outer=150, tol_kkt=1e-3))
+    assert res.converged

@@ -1,0 +1,140 @@
+"""Property tests for the paper's theory (Lemmas 1a-1c, Theorems 2-3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PCDNConfig, make_problem, solve
+from repro.core.direction import (delta_decrement, delta_upper_bound,
+                                  newton_direction)
+from repro.core.linesearch import ArmijoParams
+from repro.core.problem import expected_max_of_sample
+from repro.data import make_classification
+
+
+# -- Lemma 1(a): E[max of size-P subset] properties --------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.01, 100.0), min_size=3, max_size=40),
+       st.data())
+def test_lemma1a_monotone_in_P(lams, data):
+    lam = np.sort(np.asarray(lams))
+    n = lam.shape[0]
+    P = data.draw(st.integers(1, n - 1))
+    f_P = expected_max_of_sample(lam, P)
+    f_P1 = expected_max_of_sample(lam, P + 1)
+    assert f_P1 >= f_P - 1e-9, "E[max] must be monotone increasing in P"
+    g_P = f_P / P
+    g_P1 = f_P1 / (P + 1)
+    assert g_P1 <= g_P + 1e-9, "E[max]/P must be monotone decreasing in P"
+
+
+def test_lemma1a_constant_when_equal():
+    lam = np.full(20, 3.7)
+    for P in (1, 5, 20):
+        assert abs(expected_max_of_sample(lam, P) - 3.7) < 1e-12
+
+
+def test_lemma1a_matches_monte_carlo():
+    rng = np.random.default_rng(0)
+    lam = np.sort(rng.uniform(0.1, 5.0, size=12))
+    P = 4
+    analytic = expected_max_of_sample(lam, P)
+    draws = [lam[rng.choice(12, P, replace=False)].max()
+             for _ in range(20000)]
+    assert abs(analytic - np.mean(draws)) < 0.02
+
+
+# -- Lemma 1(b): Hessian diagonal bounds --------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["logistic",
+                                                "squared_hinge"]))
+def test_lemma1b_hessian_bounds(seed, loss_name):
+    X, y, _ = make_classification(60, 20, sparsity=0.3, seed=seed % 100)
+    c = 1.5
+    prob = make_problem(X, y, c=c, loss=loss_name)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal(20) * 0.5, jnp.float32)
+    z = prob.margins(w)
+    _, h = prob.bundle_grad_hess(z, prob.X, w)
+    theta = prob.loss.theta
+    upper = theta * c * np.asarray(prob.column_norms_sq())
+    assert np.all(np.asarray(h) <= upper + 1e-4), \
+        "Eq. 14: hess_jj <= theta*c*(X^T X)_jj"
+    assert np.all(np.asarray(h) > 0), "hessian floor must keep h positive"
+
+
+# -- Lemma 1(c): Delta upper bound + monotone descent -------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.0, 0.9))
+def test_lemma1c_delta_bound(seed, gamma):
+    rng = np.random.default_rng(seed)
+    P = 8
+    g = jnp.asarray(rng.standard_normal(P), jnp.float32)
+    h = jnp.asarray(rng.uniform(0.1, 3.0, P), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(P), jnp.float32)
+    d = newton_direction(g, h, w)
+    Delta = delta_decrement(g, h, w, d, gamma)
+    bound = delta_upper_bound(h, d, gamma)
+    assert float(Delta) <= float(bound) + 1e-5, \
+        "Eq. 16: Delta <= (gamma-1) d^T H d"
+    assert float(bound) <= 1e-6, "bound must be nonpositive"
+
+
+# -- Theorem 2: line-search step bound ----------------------------------------
+
+def test_theorem2_expected_linesearch_steps():
+    """Mean observed q^t must respect the Thm-2 upper bound."""
+    X, y, _ = make_classification(300, 120, sparsity=0.5, corr=0.5, seed=3)
+    prob = make_problem(X, y, c=1.0)
+    ap = ArmijoParams()
+    lam = np.asarray(prob.column_norms_sq(), dtype=np.float64)
+    theta, c = 0.25, 1.0
+    # empirical lower bound h_min over iterates is unknown a priori; use the
+    # floor implied by tau in (tau_min, 1-tau_min) over observed margins,
+    # conservatively 1e-4 * c * min colnorm
+    h_lo = 1e-4 * c * lam.min()
+    for P in (8, 60, 120):
+        res = solve(prob, PCDNConfig(P=P, max_outer=10))
+        e_lam = expected_max_of_sample(np.sort(lam), P)
+        bound = (1 + np.log(theta * c / (2 * h_lo * (1 - ap.sigma))) /
+                 np.log(1 / ap.beta)
+                 + 0.5 * np.log(P) / np.log(1 / ap.beta)
+                 + np.log(e_lam) / np.log(1 / ap.beta))
+        mean_q = res.history.ls_steps.mean()
+        assert mean_q <= bound, (P, mean_q, bound)
+
+
+def test_theorem2_steps_grow_with_P():
+    X, y, _ = make_classification(300, 120, sparsity=0.3, corr=0.6, seed=4)
+    prob = make_problem(X, y, c=1.0)
+    qs = []
+    for P in (1, 16, 120):
+        res = solve(prob, PCDNConfig(P=P, max_outer=8))
+        qs.append(res.history.ls_steps.mean())
+    assert qs[0] <= qs[1] + 0.2 and qs[1] <= qs[2] + 0.2, qs
+
+
+# -- Theorem 3 / Eq. 19: iteration count decreases with P ---------------------
+
+def test_iteration_count_decreases_with_P():
+    """Thm 3 counts INNER (bundle) iterations: T = n_outer * ceil(n/P)."""
+    X, y, _ = make_classification(400, 150, sparsity=0.5, corr=0.3, seed=5)
+    n = 150
+    prob = make_problem(X, y, c=1.0)
+    f_star = solve(prob, PCDNConfig(P=n, max_outer=400,
+                                    tol_kkt=1e-6)).objective
+    eps = 1e-3
+
+    def inner_iters_to_eps(P):
+        res = solve(prob, PCDNConfig(P=P, max_outer=400, tol_kkt=0.0,
+                                     tol_rel_obj=eps), f_star=f_star)
+        assert res.converged
+        return res.n_outer * (-(-n // P))
+
+    t1, t16, t150 = (inner_iters_to_eps(P) for P in (1, 16, n))
+    assert t16 <= t1, (t1, t16)
+    assert t150 <= t16, (t16, t150)
