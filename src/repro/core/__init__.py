@@ -1,4 +1,6 @@
 """Core: the paper's primary contribution — PCDN and its comparison solvers."""
+from repro.core.design_matrix import (DenseDesign, DesignMatrix,
+                                      PaddedCSCDesign, as_design)
 from repro.core.linesearch import ArmijoParams
 from repro.core.problem import (L1Problem, expected_max_column_norm,
                                 make_problem)
@@ -8,4 +10,5 @@ from repro.core import scdn, tron
 __all__ = [
     "ArmijoParams", "L1Problem", "make_problem", "expected_max_column_norm",
     "PCDNConfig", "SolveResult", "cdn_config", "solve", "scdn", "tron",
+    "DesignMatrix", "DenseDesign", "PaddedCSCDesign", "as_design",
 ]

@@ -27,10 +27,13 @@ def partition(key: Array, n: int, P: int) -> Array:
 
 
 def gather_slab(X: Array, idx: Array) -> tuple[Array, Array]:
-    """Gather the dense (s, P) column slab for one bundle.
+    """Gather the dense (s, P) column slab for one bundle from a raw array.
 
     idx: (P,) with possible sentinel n. Returns (XB, valid_mask) where
     padded columns are zeroed so they contribute nothing to any reduction.
+    Solvers holding an L1Problem go through design.gather_slab instead
+    (backend-dispatched — DESIGN.md section 7); this raw-array version
+    remains for the sharded dense path, which works on local blocks.
     """
     n = X.shape[1]
     valid = idx < n

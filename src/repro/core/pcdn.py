@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bundles as B
+from repro.core.design_matrix import SparseSlab
 from repro.core.direction import delta_decrement, newton_direction
 from repro.core.linesearch import (ArmijoParams, armijo_backtracking,
                                    armijo_batched)
@@ -86,18 +87,23 @@ def make_bundle_step(problem: L1Problem, cfg: PCDNConfig):
 
     def step(carry, idx):
         w, z = carry
-        XB, valid = B.gather_slab(problem.X, idx)
+        slab = problem.design.gather_slab(idx)
         w_B, _ = B.gather_vec(w, idx)
         if cfg.use_kernels:
             u = problem.grad_factor(z)
             v = problem.hess_factor(z)
-            d, g, h = kops.pcdn_direction(
-                XB, u, v, w_B, l2=problem.elastic_net_l2)
+            if isinstance(slab, SparseSlab):
+                d, g, h = kops.pcdn_sparse_direction(
+                    slab.rows, slab.vals, u, v, w_B,
+                    l2=problem.elastic_net_l2)
+            else:
+                d, g, h = kops.pcdn_direction(
+                    slab.XB, u, v, w_B, l2=problem.elastic_net_l2)
         else:
-            g, h = problem.bundle_grad_hess(z, XB, w_B)
+            g, h = problem.bundle_grad_hess(z, slab, w_B)
             d = newton_direction(g, h, w_B)
         Delta = delta_decrement(g, h, w_B, d, gamma)
-        delta_z = XB @ d
+        delta_z = problem.design.slab_matvec(slab, d)
         res = ls(loss, problem.c, z, delta_z, problem.y, w_B, d, Delta,
                  cfg.armijo, l2=problem.elastic_net_l2)
         w = B.scatter_add(w, idx, res.alpha * d)
@@ -130,7 +136,7 @@ def solve(problem: L1Problem, cfg: PCDNConfig,
           callback: Optional[Callable] = None) -> SolveResult:
     """Run PCDN until the KKT (or relative-objective) stop or max_outer."""
     n = problem.n_features
-    w = jnp.zeros((n,), problem.X.dtype) if w0 is None else w0
+    w = jnp.zeros((n,), problem.dtype) if w0 is None else w0
     z = problem.margins(w)
     key = jax.random.PRNGKey(cfg.seed)
     outer = make_outer_iteration(problem, cfg)

@@ -2,9 +2,12 @@
 
     min_w  F_c(w) = c * sum_i phi(w . x_i, y_i) + ||w||_1
 
-Holds the design matrix X (s, n), labels y (s,), regularization c and the
-loss. All solver math is phrased through the per-sample margin z = X @ w,
-the intermediate quantity of paper section 3.1.
+Holds the design matrix behind the `DesignMatrix` backend interface
+(DESIGN.md section 7) — dense (s, n) array or padded-CSC sparse — plus
+labels y (s,), regularization c and the loss. All solver math is phrased
+through the per-sample margin z = X @ w, the intermediate quantity of
+paper section 3.1, and through the backend's slab protocol for bundle
+restrictions, so every solver runs unchanged on either layout.
 
 `elastic_net_l2` adds an optional (lambda2/2)||w||^2 smooth term (paper
 section 6 extension); it folds into the gradient/Hessian diagonals.
@@ -12,12 +15,15 @@ section 6 extension); it folds into the gradient/Hessian diagonals.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.design_matrix import (DenseDesign, DenseSlab, DesignMatrix,
+                                      PaddedCSCDesign, Slab, SparseSlab,
+                                      as_design)
 from repro.core.losses import HESSIAN_FLOOR, Loss, get_loss
 
 Array = jax.Array
@@ -26,40 +32,56 @@ Array = jax.Array
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class L1Problem:
-    """Dense l1-regularized problem. X: (s, n) float, y: (s,) float (+-1)."""
+    """l1-regularized problem over a DesignMatrix backend. y: (s,) +-1."""
 
-    X: Array
+    design: DesignMatrix
     y: Array
     c: float
     loss_name: str = "logistic"
     elastic_net_l2: float = 0.0
 
-    # -- pytree plumbing (X, y are leaves; scalars are static aux) ----------
+    # -- pytree plumbing (design, y are leaves; scalars are static aux) ------
     def tree_flatten(self):
-        return (self.X, self.y), (self.c, self.loss_name, self.elastic_net_l2)
+        return (self.design, self.y), (self.c, self.loss_name,
+                                       self.elastic_net_l2)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        X, y = children
+        design, y = children
         c, loss_name, l2 = aux
-        return cls(X=X, y=y, c=c, loss_name=loss_name, elastic_net_l2=l2)
+        return cls(design=design, y=y, c=c, loss_name=loss_name,
+                   elastic_net_l2=l2)
 
     # -- basic accessors -----------------------------------------------------
+    @property
+    def X(self) -> Array:
+        """Back-compat dense view. Only the dense backend has one — the
+        sparse backend refuses rather than materialize (s, n)."""
+        if isinstance(self.design, DenseDesign):
+            return self.design.X
+        raise TypeError(
+            f"L1Problem.X is dense-only; this problem uses the "
+            f"{self.design.layout!r} backend. Go through problem.design.")
+
     @property
     def loss(self) -> Loss:
         return get_loss(self.loss_name)
 
     @property
     def n_samples(self) -> int:
-        return self.X.shape[0]
+        return self.design.n_samples
 
     @property
     def n_features(self) -> int:
-        return self.X.shape[1]
+        return self.design.n_features
+
+    @property
+    def dtype(self):
+        return self.design.dtype
 
     # -- objective -----------------------------------------------------------
     def margins(self, w: Array) -> Array:
-        return self.X @ w
+        return self.design.matvec(w)
 
     def objective_from_margins(self, z: Array, w: Array) -> Array:
         f = self.loss.margin_objective(z, self.y, self.c) + jnp.sum(jnp.abs(w))
@@ -79,17 +101,22 @@ class L1Problem:
         """v_i = c * d2phi/dz2_i ; hess_jj L = sum_i v_i x_ij^2."""
         return self.c * self.loss.d2z(z, self.y)
 
-    def bundle_grad_hess(self, z: Array, XB: Array, w_B: Array):
+    def bundle_grad_hess(self, z: Array, slab: Union[Slab, Array],
+                         w_B: Array):
         """Gradient and Hessian diagonal restricted to a bundle slab.
 
-        XB: (s, P) dense column slab. Returns (g_B, h_B), each (P,).
-        The two tall-skinny matvecs here are the compute hot-spot that
-        kernels/pcdn_direction fuses on TPU.
+        slab: a DenseSlab/SparseSlab from design.gather_slab, or (legacy)
+        a raw dense (s, P) column block. Returns (g_B, h_B), each (P,).
+        The reductions here are the compute hot-spot that the Pallas
+        kernels fuse on TPU (DESIGN.md sections 3.1 / 7.3).
         """
         u = self.grad_factor(z)
         v = self.hess_factor(z)
-        g = XB.T @ u
-        h = jnp.square(XB).T @ v
+        if isinstance(slab, (DenseSlab, SparseSlab)):
+            g, h = self.design.slab_grad_hess(slab, u, v)
+        else:  # raw dense (s, P) array — legacy call sites and tests
+            g = slab.T @ u
+            h = jnp.square(slab).T @ v
         if self.elastic_net_l2:
             g = g + self.elastic_net_l2 * w_B
             h = h + self.elastic_net_l2
@@ -97,7 +124,7 @@ class L1Problem:
 
     def full_grad(self, z: Array, w: Array) -> Array:
         """grad L(w) (n,) — used by TRON and the KKT stopping criterion."""
-        g = self.X.T @ self.grad_factor(z)
+        g = self.design.rmatvec(self.grad_factor(z))
         if self.elastic_net_l2:
             g = g + self.elastic_net_l2 * w
         return g
@@ -123,7 +150,7 @@ class L1Problem:
     # -- Lemma 1 quantities ----------------------------------------------------
     def column_norms_sq(self) -> Array:
         """(X^T X)_jj for j in N — the lambda_j of Lemma 1 / Theorem 2."""
-        return jnp.sum(jnp.square(self.X), axis=0)
+        return self.design.column_norms_sq()
 
 
 def make_problem(
@@ -133,10 +160,18 @@ def make_problem(
     loss: str = "logistic",
     elastic_net_l2: float = 0.0,
     dtype=jnp.float32,
+    layout: str = "auto",
+    k_max: Optional[int] = None,
 ) -> L1Problem:
-    X = jnp.asarray(np.asarray(X), dtype=dtype)
+    """Build an L1Problem from a dense array, CSRMatrix, or DesignMatrix.
+
+    layout="auto" keeps dense input dense and CSR input padded-CSC (no
+    densification); "padded_csc" forces the sparse backend (converting a
+    dense array if needed — handy for equivalence tests).
+    """
+    design = as_design(X, dtype=dtype, layout=layout, k_max=k_max)
     y = jnp.asarray(np.asarray(y), dtype=dtype)
-    return L1Problem(X=X, y=y, c=float(c), loss_name=loss,
+    return L1Problem(design=design, y=y, c=float(c), loss_name=loss,
                      elastic_net_l2=float(elastic_net_l2))
 
 

@@ -58,23 +58,25 @@ def make_round(problem: L1Problem, cfg: SCDNConfig):
     def one_batch(carry, key):
         w, z = carry
         idx = jax.random.randint(key, (cfg.P_bar,), 0, n)  # with replacement
-        XB, _ = B.gather_slab(problem.X, idx)
+        slab = problem.design.gather_slab(idx)
         w_B, _ = B.gather_vec(w, idx)
-        g, h = problem.bundle_grad_hess(z, XB, w_B)
+        g, h = problem.bundle_grad_hess(z, slab, w_B)
         d = newton_direction(g, h, w_B)
 
         # per-coordinate 1-D line searches, each blind to the others
-        def ls_one(xj, wj, dj, gj, hj):
+        deltas = problem.design.slab_coordinate_deltas(slab, d)  # (P, s)
+
+        def ls_one(delta_j, wj, dj, gj, hj):
             Delta = delta_decrement(gj[None], hj[None], wj[None], dj[None],
                                     cfg.armijo.gamma)
-            res = armijo_batched(loss, problem.c, z, xj * dj, problem.y,
+            res = armijo_batched(loss, problem.c, z, delta_j, problem.y,
                                  wj[None], dj[None], Delta, cfg.armijo)
             return res.alpha
 
-        alphas = jax.vmap(ls_one, in_axes=(1, 0, 0, 0, 0))(XB, w_B, d, g, h)
+        alphas = jax.vmap(ls_one)(deltas, w_B, d, g, h)
         upd = alphas * d
         w = B.scatter_add(w, idx, upd)
-        z = z + XB @ upd
+        z = z + problem.design.slab_matvec(slab, upd)
         return (w, z), None
 
     def round_fn(w, z, key):
@@ -92,8 +94,8 @@ def solve(problem: L1Problem, cfg: SCDNConfig,
           f_star: Optional[float] = None,
           divergence_factor: float = 1e3) -> SCDNResult:
     n = problem.n_features
-    w = jnp.zeros((n,), problem.X.dtype)
-    z = jnp.zeros((problem.n_samples,), problem.X.dtype)
+    w = jnp.zeros((n,), problem.dtype)
+    z = jnp.zeros((problem.n_samples,), problem.dtype)
     key = jax.random.PRNGKey(cfg.seed)
     round_fn = make_round(problem, cfg)
 

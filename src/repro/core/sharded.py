@@ -24,6 +24,13 @@ minimum payload):
 Phase 2 is the paper's footnote-3 reduction-sum for d.x_i, mapped onto the
 ICI; phases 1+3 carry O(P + Q) floats — the paper's low-communication
 property preserved at pod scale.
+
+Both design-matrix layouts ride the same schedule: layout="dense" shards
+the raw (s, n) array as above, layout="padded_csc" shards the padded
+feature-major sparse arrays from `shard_problem_sparse` — each shard holds
+its own columns' nonzeros with row ids local to its sample range, so the
+shard-local bundle math drops from O(s_l * P_local) to O(P_local * k_max)
+while every collective payload stays identical (DESIGN.md section 7.4).
 """
 from __future__ import annotations
 
@@ -35,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.compat import shard_map as _shard_map
 
 from repro.core import bundles as B
 from repro.core.direction import delta_decrement, newton_direction
@@ -75,11 +84,15 @@ def _axis_size(axis) -> Array:
 
 
 def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
-                       n_local: int):
+                       n_local: int, layout: str = "dense"):
     """Build the jitted sharded outer-iteration fn.
 
-    Returns fn(X_l, y_l, w, z, key) -> (w, z, f, kkt) operating on arrays
-    sharded as described in the module docstring. n_local = features per
+    layout="dense": fn(X_l, y_l, w, z, key); layout="padded_csc":
+    fn(col_rows, col_vals, y_l, w, z, key) where col_rows/col_vals are the
+    (n, D*k_max) packed per-(column, data-shard) local-row arrays from
+    `shard_problem_sparse` (DESIGN.md section 7.4). Both return
+    (w, z, f, kkt, mean_ls_steps) with identical collective schedules —
+    only the shard-local bundle math differs. n_local = features per
     model shard (static).
     """
     loss = get_loss(cfg.loss_name)
@@ -90,9 +103,16 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
     b = -(-n_local // P_local)
     data_axes = tuple(cfg.data_axes)
     model_axis = cfg.model_axis
+    if layout not in ("dense", "padded_csc"):
+        raise ValueError(f"unknown layout {layout!r}")
 
-    def outer_local(X_l, y_l, w_l, z_l, key):
+    def outer_local(*args):
         """Runs inside shard_map: every array is this shard's block."""
+        if layout == "dense":
+            X_l, y_l, w_l, z_l, key = args
+        else:
+            rows_l, vals_l, y_l, w_l, z_l, key = args
+        s_l = z_l.shape[0]
         n_model = _axis_size(model_axis)
         n_data = _axis_size(data_axes)
         m_idx = jax.lax.axis_index(model_axis)
@@ -102,14 +122,48 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
         idxs = B.partition(sub, n_local, P_local)          # (b, P_local)
         alphas = candidate_alphas(cfg.armijo, z_l.dtype)   # (Q,)
 
+        def gather_local(idx):
+            """-> layout-specific slab for this shard's rows of bundle B."""
+            if layout == "dense":
+                XB, _ = B.gather_slab(X_l, idx)            # (s_l, P_local)
+                return XB
+            valid = idx < n_local
+            safe = jnp.minimum(idx, n_local - 1)
+            rB = jnp.where(valid[:, None], jnp.take(rows_l, safe, axis=0),
+                           s_l)                            # (P_local, k)
+            vB = jnp.take(vals_l, safe, axis=0) * \
+                valid[:, None].astype(vals_l.dtype)
+            return rB, vB
+
+        def grad_hess_parts(slab, u, v):
+            if layout == "dense":
+                return slab.T @ u, jnp.square(slab).T @ v
+            rB, vB = slab
+            ug = jnp.take(u, rB, mode="fill", fill_value=0)
+            vg = jnp.take(v, rB, mode="fill", fill_value=0)
+            return (jnp.sum(ug * vB, axis=1),
+                    jnp.sum(vg * jnp.square(vB), axis=1))
+
+        def margin_delta_part(slab, d):
+            if layout == "dense":
+                return slab @ d
+            rB, vB = slab
+            return jnp.zeros((s_l,), vB.dtype).at[rB].add(
+                vB * d[:, None], mode="drop")
+
+        def full_grad_part(u):
+            if layout == "dense":
+                return X_l.T @ u
+            ug = jnp.take(u, rows_l, mode="fill", fill_value=0)
+            return jnp.sum(ug * vals_l, axis=1)
+
         def bundle_step(carry, idx):
             w_l, z_l = carry
-            XB, _ = B.gather_slab(X_l, idx)                # (s_l, P_local)
+            slab = gather_local(idx)
             w_B, _ = B.gather_vec(w_l, idx)
             u = c * loss.dz(z_l, y_l)
             v = c * loss.d2z(z_l, y_l)
-            g_part = XB.T @ u
-            h_part = jnp.square(XB).T @ v
+            g_part, h_part = grad_hess_parts(slab, u, v)
             # -- phase 1: grad/hess psum over sample shards
             if cfg.fuse_collectives:
                 gh = jax.lax.psum(jnp.concatenate([g_part, h_part]),
@@ -125,7 +179,7 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
             d = newton_direction(g, h, w_B)
             # Delta (Eq. 7) sums over the *global* bundle -> psum over model
             Delta_part = delta_decrement(g, h, w_B, d, gamma)
-            dz_part = XB @ d                               # (s_l,)
+            dz_part = margin_delta_part(slab, d)           # (s_l,)
             # -- phase 2: margins of the bundle step (+ Delta when fused)
             if cfg.fuse_collectives:
                 packed = jax.lax.psum(
@@ -190,7 +244,7 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
         f = f_loss + f_l1
         # full local gradient for KKT: (n_local,) psum over data
         u = c * loss.dz(z_l, y_l)
-        g_full = jax.lax.psum(X_l.T @ u, data_axes)
+        g_full = jax.lax.psum(full_grad_part(u), data_axes)
         if cfg.elastic_net_l2:
             g_full = g_full + cfg.elastic_net_l2 * w_l
         viol = jnp.where(
@@ -202,20 +256,30 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
 
     dspec = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
 
-    mapped = jax.shard_map(
+    if layout == "dense":
+        in_specs = (P(dspec, model_axis),   # X
+                    P(dspec),               # y
+                    P(model_axis),          # w
+                    P(dspec),               # z
+                    P())                    # key (replicated)
+    else:
+        in_specs = (P(model_axis, dspec),   # col_rows (n, D*k_max)
+                    P(model_axis, dspec),   # col_vals
+                    P(dspec),               # y
+                    P(model_axis),          # w
+                    P(dspec),               # z
+                    P())                    # key (replicated)
+
+    mapped = _shard_map(
         outer_local, mesh=mesh,
-        in_specs=(P(dspec, model_axis),   # X
-                  P(dspec),               # y
-                  P(model_axis),          # w
-                  P(dspec),               # z
-                  P()),                   # key (replicated)
+        in_specs=in_specs,
         out_specs=(P(model_axis), P(dspec), P(), P(), P()),
-        check_vma=False,
     )
 
-    def outer(X, y, w, z, key):
+    def outer(*design_and_data):
+        *rest, key = design_and_data
         key, sub = jax.random.split(key)
-        w, z, f, kkt, q = mapped(X, y, w, z, sub)
+        w, z, f, kkt, q = mapped(*rest, sub)
         return w, z, key, f, kkt, q
 
     return jax.jit(outer)
@@ -243,20 +307,109 @@ def shard_problem(X: np.ndarray, y: np.ndarray, mesh: Mesh,
     return Xs, ys, w, z
 
 
-def solve_sharded(X: np.ndarray, y: np.ndarray, mesh: Mesh,
+def shard_problem_sparse(X, y: np.ndarray, mesh: Mesh,
+                         cfg: ShardedPCDNConfig, k_max: int = None):
+    """Sparse placer: per-(model column, data shard) padded local rows.
+
+    X: dense np array or CSR-like (.data/.indices/.indptr/.shape) — the
+    latter never densifies. Builds
+
+        col_rows : (n_pad, D * k_max) int32   local row id or sentinel s_l
+        col_vals : (n_pad, D * k_max) float32
+
+    packed so shard (di, mi) sees the (n_local, k_max) block of its own
+    columns with row ids local to its sample range — axis 0 is sharded
+    over "model", axis 1 over the data axes (DESIGN.md section 7.4).
+    k_max = max nnz of any (column, data-shard) cell unless given.
+    Returns (col_rows, col_vals, ys, w, z) device arrays.
+    """
+    dspec = tuple(cfg.data_axes) if len(cfg.data_axes) > 1 else cfg.data_axes[0]
+    d_sz = int(np.prod([mesh.shape[a] for a in cfg.data_axes]))
+    m_sz = mesh.shape[cfg.model_axis]
+
+    if all(hasattr(X, a) for a in ("data", "indices", "indptr", "shape")):
+        s, n = X.shape
+        vals = np.asarray(X.data, dtype=np.float32)
+        cols = np.asarray(X.indices, dtype=np.int64)
+        rows = np.repeat(np.arange(s, dtype=np.int64),
+                         np.diff(np.asarray(X.indptr)))
+    else:
+        X = np.asarray(X)
+        s, n = X.shape
+        rows, cols = np.nonzero(X)
+        vals = X[rows, cols].astype(np.float32)
+
+    s_pad = s + (-s) % d_sz
+    n_pad = n + (-n) % m_sz
+    s_l = s_pad // d_sz
+    y_full = np.ones((s_pad,), np.float32)  # zero rows: no gradient
+    y_full[:s] = y
+
+    # group nnz by (column, data shard) and rank within each group
+    di = rows // s_l
+    local_r = (rows % s_l).astype(np.int32)
+    group = cols * d_sz + di
+    order = np.argsort(group, kind="stable")
+    group, local_r, cols_s, vals_s = (group[order], local_r[order],
+                                      cols[order], vals[order])
+    counts = np.bincount(group, minlength=n_pad * d_sz).astype(np.int64)
+    k = int(max(1, counts.max() if counts.size else 1))
+    if k_max is not None:
+        if k > int(k_max):
+            raise ValueError(f"k_max={k_max} < max (column, shard) nnz {k}")
+        k = int(k_max)
+    start = np.concatenate([[0], np.cumsum(counts)])
+    pos = np.arange(group.shape[0], dtype=np.int64) - start[group]
+    col_rows = np.full((n_pad, d_sz * k), s_l, np.int32)
+    col_vals = np.zeros((n_pad, d_sz * k), np.float32)
+    slot = (group % d_sz) * k + pos
+    col_rows[cols_s, slot] = local_r
+    col_vals[cols_s, slot] = vals_s
+
+    rows_d = jax.device_put(
+        col_rows, NamedSharding(mesh, P(cfg.model_axis, dspec)))
+    vals_d = jax.device_put(
+        col_vals, NamedSharding(mesh, P(cfg.model_axis, dspec)))
+    ys = jax.device_put(y_full, NamedSharding(mesh, P(dspec)))
+    w = jax.device_put(np.zeros(n_pad, np.float32),
+                       NamedSharding(mesh, P(cfg.model_axis)))
+    z = jax.device_put(np.zeros(s_pad, np.float32),
+                       NamedSharding(mesh, P(dspec)))
+    return rows_d, vals_d, ys, w, z
+
+
+def solve_sharded(X, y: np.ndarray, mesh: Mesh,
                   cfg: ShardedPCDNConfig, max_outer: int = 100,
-                  tol_kkt: float = 1e-3):
-    """Host driver mirroring repro.core.pcdn.solve on a mesh."""
-    Xs, ys, w, z = shard_problem(X, y, mesh, cfg)
-    n_local = Xs.shape[1] // mesh.shape[cfg.model_axis]
-    outer = make_sharded_outer(cfg, mesh, n_local)
+                  tol_kkt: float = 1e-3, layout: str = "auto",
+                  k_max: int = None):
+    """Host driver mirroring repro.core.pcdn.solve on a mesh.
+
+    layout="auto" picks padded_csc for CSR-like X and dense for arrays;
+    either can be forced (forcing a CSR dense is refused upstream)."""
+    is_csr = all(hasattr(X, a) for a in ("data", "indices", "indptr",
+                                         "shape"))
+    if layout == "auto":
+        layout = "padded_csc" if is_csr else "dense"
+    if layout == "dense":
+        if is_csr:
+            raise ValueError("CSR input with layout='dense' would densify")
+        Xs, ys, w, z = shard_problem(X, y, mesh, cfg)
+        design = (Xs,)
+        n_feat = Xs.shape[1]
+    else:
+        rows_d, vals_d, ys, w, z = shard_problem_sparse(X, y, mesh, cfg,
+                                                        k_max=k_max)
+        design = (rows_d, vals_d)
+        n_feat = rows_d.shape[0]
+    n_local = n_feat // mesh.shape[cfg.model_axis]
+    outer = make_sharded_outer(cfg, mesh, n_local, layout=layout)
     key = jax.random.PRNGKey(cfg.seed)
     hist = {"objective": [], "kkt": []}
     f = kkt = None
     converged = False
     k = 0
     for k in range(max_outer):
-        w, z, key, f, kkt, q = outer(Xs, ys, w, z, key)
+        w, z, key, f, kkt, q = outer(*design, ys, w, z, key)
         hist["objective"].append(float(f))
         hist["kkt"].append(float(kkt))
         if float(kkt) <= tol_kkt:

@@ -48,24 +48,28 @@ class TRONResult(NamedTuple):
 
 
 def _make_oracles(problem: L1Problem):
-    X, y, c = problem.X, problem.y, problem.c
+    """All X touches go through the DesignMatrix backend (matvec/rmatvec),
+    so TRON runs unchanged on dense or padded-CSC problems."""
+    design, y, c = problem.design, problem.y, problem.c
     loss = problem.loss
     n = problem.n_features
 
     @jax.jit
     def fgrad(v):
         w = v[:n] - v[n:]
-        z = X @ w
+        z = design.matvec(w)
         f = c * jnp.sum(loss.value(z, y)) + jnp.sum(v)
         u = c * loss.dz(z, y)
-        g = X.T @ u
+        g = design.rmatvec(u)
         grad = jnp.concatenate([g, -g]) + 1.0
         return f, grad, z
 
     @jax.jit
     def hess_vec(z, p):
         pw = p[:n] - p[n:]
-        hv = X.T @ (jnp.maximum(c * loss.d2z(z, y), HESSIAN_FLOOR) * (X @ pw))
+        hv = design.rmatvec(
+            jnp.maximum(c * loss.d2z(z, y), HESSIAN_FLOOR) *
+            design.matvec(pw))
         return jnp.concatenate([hv, -hv])
 
     return fgrad, hess_vec
@@ -112,7 +116,7 @@ def _boundary_tau(p, d, radius):
 def solve(problem: L1Problem, cfg: TRONConfig = TRONConfig()) -> TRONResult:
     n = problem.n_features
     fgrad, hess_vec = _make_oracles(problem)
-    v = jnp.zeros((2 * n,), problem.X.dtype)
+    v = jnp.zeros((2 * n,), problem.dtype)
     f, grad, z = fgrad(v)
     radius = float(jnp.linalg.norm(grad))
 

@@ -1,9 +1,13 @@
 """Data substrate: LIBSVM parsing, synthetic datasets, LM token pipeline."""
-from repro.data.libsvm import load_libsvm, save_libsvm
+from repro.data.libsvm import (CSRMatrix, PaddedCSC, csr_to_padded_csc,
+                               load_libsvm, save_libsvm)
 from repro.data.synthetic import (PAPER_DATASETS, duplicate_samples,
-                                  make_classification, paper_like)
+                                  make_classification,
+                                  make_sparse_classification, paper_like)
 
 __all__ = [
     "load_libsvm", "save_libsvm", "make_classification", "paper_like",
     "duplicate_samples", "PAPER_DATASETS",
+    "CSRMatrix", "PaddedCSC", "csr_to_padded_csc",
+    "make_sparse_classification",
 ]

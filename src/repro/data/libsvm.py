@@ -1,9 +1,18 @@
 """LIBSVM text format reader/writer (the paper's six datasets ship in it).
 
 Format, one sample per line:   <label> <idx>:<val> <idx>:<val> ...
-Indices are 1-based. Returns dense float32 arrays (the solver's TPU
-adaptation works on dense bundle slabs — DESIGN.md section 3.1); a CSR
-triple is also returned for sparsity-aware callers.
+Indices are 1-based. Three output layouts (DESIGN.md sections 3.1 / 7):
+
+    layout="dense"       (s, n) float32 array — the original TPU slab path
+    layout="csr"         CSRMatrix triple, no densification
+    layout="padded_csc"  (col_rows, col_vals, shape) feature-major padded
+                         arrays for the sparse DesignMatrix backend —
+                         zero densification end to end
+
+Parsing is numpy-vectorized: the per-line Python work is only collecting
+"idx:val" tokens; index/value conversion of the whole nnz stream happens
+in two `np.array(...).astype(...)` calls, which is ~an order of magnitude
+faster than float()-per-token for the paper's datasets.
 """
 from __future__ import annotations
 
@@ -25,48 +34,100 @@ class CSRMatrix:
         return int(self.data.shape[0])
 
     def to_dense(self) -> np.ndarray:
+        """Vectorized scatter — one fancy-indexed assignment, no row loop."""
         s, n = self.shape
         out = np.zeros((s, n), dtype=np.float32)
-        for i in range(s):
-            lo, hi = self.indptr[i], self.indptr[i + 1]
-            out[i, self.indices[lo:hi]] = self.data[lo:hi]
+        row_ids = np.repeat(np.arange(s), np.diff(self.indptr))
+        out[row_ids, self.indices] = self.data
         return out
 
     def sparsity(self) -> float:
         s, n = self.shape
         return 1.0 - self.nnz / float(s * n)
 
+    def max_col_nnz(self) -> int:
+        """k_max of the padded-CSC layout this matrix would convert to."""
+        if self.nnz == 0:
+            return 1
+        return int(np.bincount(self.indices,
+                               minlength=self.shape[1]).max())
 
-def load_libsvm(path: str, n_features: Optional[int] = None,
-                dense: bool = True):
-    """-> (X, y) with X dense (s, n) float32, y (s,) float32 in {-1, +1};
-    or (csr, y) when dense=False."""
-    labels, rows_i, rows_v, ptr = [], [], [], [0]
-    max_idx = 0
+
+@dataclasses.dataclass
+class PaddedCSC:
+    """Numpy-side padded feature-major layout (see core.design_matrix)."""
+    col_rows: np.ndarray  # (n, k_max) int32; sentinel == s at padding
+    col_vals: np.ndarray  # (n, k_max) float32; 0 at padding
+    shape: Tuple[int, int]
+
+    @property
+    def k_max(self) -> int:
+        return int(self.col_rows.shape[1])
+
+    @property
+    def nnz(self) -> int:
+        return int(np.count_nonzero(self.col_rows < self.shape[0]))
+
+
+def csr_to_padded_csc(csr: CSRMatrix,
+                      k_max: Optional[int] = None) -> PaddedCSC:
+    """CSR -> padded-CSC without densifying. k_max defaults to the max
+    column nnz; a smaller explicit k_max raises if any column overflows
+    (truncation would silently change the objective — DESIGN.md 7.2)."""
+    from repro.core.design_matrix import padded_csc_arrays
+    col_rows, col_vals, s, n = padded_csc_arrays(
+        csr.data, csr.indices, csr.indptr, csr.shape, k_max=k_max)
+    return PaddedCSC(col_rows=col_rows, col_vals=col_vals, shape=(s, n))
+
+
+def _parse_libsvm_text(path: str):
+    # Two flat 1-D token lists (not an (nnz, 2) unicode matrix — numpy
+    # fixed-width string arrays cost max-token-width * 4 B per cell,
+    # which is GBs of transient memory at paper-dataset nnz counts);
+    # numeric conversion of each list is one vectorized np.asarray.
+    labels, idx_tok, val_tok, ptr = [], [], [], [0]
     with open(path, "r") as fh:
         for line in fh:
             parts = line.split()
             if not parts:
                 continue
-            labels.append(float(parts[0]))
+            labels.append(parts[0])
             for tok in parts[1:]:
-                k, v = tok.split(":")
-                j = int(k) - 1
-                max_idx = max(max_idx, j + 1)
-                rows_i.append(j)
-                rows_v.append(float(v))
-            ptr.append(len(rows_i))
-    n = n_features or max_idx
+                k, _, v = tok.partition(":")
+                idx_tok.append(k)
+                val_tok.append(v)
+            ptr.append(len(idx_tok))
     y = np.asarray(labels, dtype=np.float32)
+    idx = np.asarray(idx_tok, dtype=np.int64) - 1    # 1-based on disk
+    vals = np.asarray(val_tok, dtype=np.float32)
+    return y, idx, vals, np.asarray(ptr, dtype=np.int64)
+
+
+def load_libsvm(path: str, n_features: Optional[int] = None,
+                dense: bool = True, layout: Optional[str] = None,
+                k_max: Optional[int] = None):
+    """-> (X, y) where X's type follows `layout` (y (s,) float32 +-1).
+
+    layout: "dense" (default; (s, n) float32 array), "csr" (CSRMatrix),
+    or "padded_csc" (PaddedCSC — never materializes the dense matrix).
+    The legacy `dense=False` flag maps to layout="csr".
+    """
+    if layout is None:
+        layout = "dense" if dense else "csr"
+    if layout not in ("dense", "csr", "padded_csc"):
+        raise ValueError(f"unknown layout {layout!r}")
+
+    y, idx, vals, ptr = _parse_libsvm_text(path)
+    n = n_features or (int(idx.max()) + 1 if idx.size else 0)
     # normalize labels to {-1, +1} (a9a-style 0/1 files appear in the wild)
     uniq = np.unique(y)
     if set(uniq.tolist()) <= {0.0, 1.0}:
         y = np.where(y > 0, 1.0, -1.0).astype(np.float32)
-    csr = CSRMatrix(np.asarray(rows_v, np.float32),
-                    np.asarray(rows_i, np.int32),
-                    np.asarray(ptr, np.int64), (len(labels), n))
-    if dense:
+    csr = CSRMatrix(vals, idx.astype(np.int32), ptr, (y.shape[0], n))
+    if layout == "dense":
         return csr.to_dense(), y
+    if layout == "padded_csc":
+        return csr_to_padded_csc(csr, k_max=k_max), y
     return csr, y
 
 

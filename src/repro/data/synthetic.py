@@ -121,6 +121,51 @@ def paper_like(name: str, scale: Optional[float] = None, seed: int = 0,
     return X[:cut], y[:cut], X[cut:], y[cut:], spec
 
 
+def make_sparse_classification(
+    s: int,
+    n: int,
+    nnz_per_col: int = 16,
+    w_nnz_frac: float = 0.02,
+    noise: float = 0.1,
+    seed: int = 0,
+):
+    """Directly-sparse classification data — never materializes (s, n).
+
+    Generates the padded-CSC layout column by column (vectorized): each
+    column gets 1..nnz_per_col nonzeros at rows sampled with replacement
+    (duplicate (i, j) slots sum, which both backends treat identically),
+    values ~ N(0, 1/sqrt(nnz)). Labels come from a planted sparse linear
+    model through a logistic link, with margins computed by an O(nnz)
+    scatter — so a 20k x 50k problem costs ~n*k_max*8 bytes, not the
+    4 GB of its dense form (DESIGN.md section 7). Returns
+    (PaddedCSC, y (s,) +-1 f32, w_true (n,) f32).
+    """
+    from repro.data.libsvm import PaddedCSC
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(1, nnz_per_col + 1, size=n)
+    k_max = int(nnz_per_col)
+    col_rows = np.full((n, k_max), s, np.int32)
+    col_vals = np.zeros((n, k_max), np.float32)
+    mask = np.arange(k_max)[None, :] < counts[:, None]
+    nnz = int(mask.sum())
+    col_rows[mask] = rng.integers(0, s, size=nnz)
+    scale = 1.0 / np.sqrt(counts.astype(np.float32))
+    col_vals[mask] = rng.standard_normal(nnz).astype(np.float32) * \
+        np.repeat(scale, counts)
+
+    w_true = np.zeros((n,), np.float32)
+    k_w = max(1, int(w_nnz_frac * n))
+    sup = rng.choice(n, size=k_w, replace=False)
+    w_true[sup] = rng.standard_normal(k_w).astype(np.float32) * 2.0
+    z = np.zeros((s,), np.float32)
+    np.add.at(z, col_rows[mask], col_vals[mask] * np.repeat(w_true, counts))
+    z += noise * rng.standard_normal(s).astype(np.float32)
+    p = 1.0 / (1.0 + np.exp(-z))
+    y = np.where(rng.random(s) < p, 1.0, -1.0).astype(np.float32)
+    return PaddedCSC(col_rows=col_rows, col_vals=col_vals, shape=(s, n)), \
+        y, w_true
+
+
 def duplicate_samples(X: np.ndarray, y: np.ndarray,
                       factor: float) -> Tuple[np.ndarray, np.ndarray]:
     """Section 5.4.1 data-size scaling: duplicate samples so the feature

@@ -19,6 +19,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.pcdn_direction import pcdn_direction_kernel
 from repro.kernels.pcdn_linesearch import pcdn_linesearch_kernel
+from repro.kernels.pcdn_sparse_direction import pcdn_sparse_direction_kernel
 
 Array = jax.Array
 
@@ -53,6 +54,28 @@ def pcdn_direction(XB: Array, u: Array, v: Array, w_B: Array,
     wp = _pad_to(w_B, 0, block_p)
     d, g, h = pcdn_direction_kernel(XBp, up, vp, wp, l2=l2, block_s=bs,
                                     block_p=block_p, interpret=INTERPRET)
+    return d[:P], g[:P], h[:P]
+
+
+@functools.partial(jax.jit, static_argnames=("l2", "block_p"))
+def pcdn_sparse_direction(rows: Array, vals: Array, u: Array, v: Array,
+                          w_B: Array, l2: float = 0.0,
+                          block_p: int = 128):
+    """Fused sparse bundle direction over the padded-CSC slab layout.
+
+    rows/vals (P, k_max) from PaddedCSCDesign.gather_slab -> (d, g, h),
+    each (P,). Pads P to a tile multiple; padded features carry sentinel
+    rows (gather fills 0) and w = 0, so g = 0 -> d = 0, and are sliced
+    away. k_max is left unpadded — the kernel reduces over it in full.
+    """
+    P, _ = rows.shape
+    s = u.shape[0]
+    bp = min(block_p, max(8, P))
+    rowsp = _pad_to(rows, 0, bp, value=s)
+    valsp = _pad_to(vals, 0, bp)
+    wp = _pad_to(w_B, 0, bp)
+    d, g, h = pcdn_sparse_direction_kernel(rowsp, valsp, u, v, wp, l2=l2,
+                                           block_p=bp, interpret=INTERPRET)
     return d[:P], g[:P], h[:P]
 
 

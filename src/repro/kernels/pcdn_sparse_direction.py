@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused PCDN bundle direction, padded-CSC layout.
+
+Sparse sibling of kernels/pcdn_direction (DESIGN.md section 7.3). For a
+bundle's padded column slab — rows (P, k_max) int32 with sentinel == s at
+padding slots, vals (P, k_max) float — and per-sample factors
+u = c*dphi/dz, v = c*d2phi/dz2 this computes, in ONE pass over the slab:
+
+    g_j = sum_k u[rows_jk] * vals_jk          (bundle gradient, Eq. 12)
+    h_j = max(sum_k v[rows_jk] * vals_jk^2, nu)
+    d_j = Eq. 5 soft-threshold Newton direction
+
+The slab is read once; the gather of u/v at rows, both reductions and the
+elementwise epilogue all run out of VMEM. Work is O(P * k_max) instead of
+the dense kernel's O(s * P) — the entire point of the sparse backend.
+
+Grid = (P_tiles,): each program owns a (BP, k_max) tile of columns plus
+the whole u and v vectors, which stay resident in VMEM across tiles
+(constant index map). That caps s at VMEM scale (~2M f32 per vector);
+beyond that the sample axis must move to an HBM-resident gather via
+scalar-prefetched DMA (PrefetchScalarGridSpec) — documented follow-up,
+not needed at the repro's scales. Rows are int32 and the gather is
+expressed as `jnp.take(..., mode="fill", fill_value=0)`, so sentinel
+(== s, out of bounds) slots contribute exactly 0 to both reductions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_P = 128
+HESSIAN_FLOOR = 1e-12
+
+
+def _kernel(rows_ref, vals_ref, u_ref, v_ref, w_ref, l2_ref,
+            d_ref, g_ref, h_ref):
+    rows = rows_ref[...]                  # (BP, K) int32
+    vals = vals_ref[...]                  # (BP, K) f32
+    u = u_ref[0, :]                       # (s,) resident across tiles
+    v = v_ref[0, :]
+    # gather + masked segment reduction; OOB (sentinel) rows fill 0
+    ug = jnp.take(u, rows, mode="fill", fill_value=0.0)
+    vg = jnp.take(v, rows, mode="fill", fill_value=0.0)
+    g = jnp.sum(ug * vals, axis=1)        # (BP,)
+    h = jnp.sum(vg * vals * vals, axis=1)
+
+    w = w_ref[0, :]                       # (BP,)
+    l2 = l2_ref[0, 0]
+    g = g + l2 * w
+    h = jnp.maximum(h + l2, HESSIAN_FLOOR)
+    # Eq. 5 closed form
+    d_neg = -(g + 1.0) / h
+    d_pos = -(g - 1.0) / h
+    d = jnp.where(g + 1.0 <= h * w, d_neg,
+                  jnp.where(g - 1.0 >= h * w, d_pos, -w))
+    d_ref[0, :] = d
+    g_ref[0, :] = g
+    h_ref[0, :] = h
+
+
+def pcdn_sparse_direction_kernel(
+    rows: Array, vals: Array, u: Array, v: Array, w_B: Array,
+    l2: float = 0.0,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool = True,
+):
+    """Raw kernel launch. rows/vals (P, K) with P % block_p == 0.
+    Returns (d, g, h), each (P,) float32.
+    """
+    P, K = rows.shape
+    assert P % block_p == 0, (P, block_p)
+    s = u.shape[0]
+    n_p = P // block_p
+    u2 = u.reshape(1, s).astype(jnp.float32)
+    v2 = v.reshape(1, s).astype(jnp.float32)
+    w2 = w_B.reshape(1, P).astype(jnp.float32)
+    l2a = jnp.full((1, 1), l2, jnp.float32)
+
+    out_shape = [jax.ShapeDtypeStruct((1, P), jnp.float32)] * 3
+    d, g, h = pl.pallas_call(
+        _kernel,
+        grid=(n_p,),
+        in_specs=[
+            pl.BlockSpec((block_p, K), lambda i: (i, 0)),   # rows
+            pl.BlockSpec((block_p, K), lambda i: (i, 0)),   # vals
+            pl.BlockSpec((1, s), lambda i: (0, 0)),         # u (resident)
+            pl.BlockSpec((1, s), lambda i: (0, 0)),         # v (resident)
+            pl.BlockSpec((1, block_p), lambda i: (0, i)),   # w_B
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # l2
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_p), lambda i: (0, i)),
+            pl.BlockSpec((1, block_p), lambda i: (0, i)),
+            pl.BlockSpec((1, block_p), lambda i: (0, i)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(rows, vals.astype(jnp.float32), u2, v2, w2, l2a)
+    return d.reshape(P), g.reshape(P), h.reshape(P)

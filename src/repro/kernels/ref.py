@@ -23,6 +23,19 @@ def pcdn_direction_ref(XB: Array, u: Array, v: Array, w_B: Array,
     return d, g, h
 
 
+def pcdn_sparse_direction_ref(rows: Array, vals: Array, u: Array, v: Array,
+                              w_B: Array, l2: float = 0.0):
+    """(d, g, h) for a padded-CSC slab (rows sentinel == len(u) drops)."""
+    vals = vals.astype(jnp.float32)
+    ug = jnp.take(u.astype(jnp.float32), rows, mode="fill", fill_value=0)
+    vg = jnp.take(v.astype(jnp.float32), rows, mode="fill", fill_value=0)
+    g = jnp.sum(ug * vals, axis=1) + l2 * w_B
+    h = jnp.maximum(jnp.sum(vg * jnp.square(vals), axis=1) + l2,
+                    HESSIAN_FLOOR)
+    d = newton_direction(g, h, w_B.astype(jnp.float32))
+    return d, g, h
+
+
 def pcdn_linesearch_ref(z: Array, delta: Array, y: Array, alphas: Array,
                         kind: str = "logistic") -> Array:
     """(Q,) per-candidate loss deltas: sum_i phi(z + a*delta) - phi(z)."""

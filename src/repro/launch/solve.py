@@ -38,6 +38,10 @@ def main(argv=None):
                     help="regularization (default: paper's c* per dataset)")
     ap.add_argument("--tol", type=float, default=1e-3)
     ap.add_argument("--max-outer", type=int, default=100)
+    ap.add_argument("--layout", default="auto",
+                    choices=["auto", "dense", "padded_csc"],
+                    help="design-matrix backend; padded_csc never "
+                         "densifies a .libsvm input (DESIGN.md section 7)")
     ap.add_argument("--sharded", action="store_true",
                     help="run the distributed (shard_map) implementation")
     ap.add_argument("--data-parallel", type=int, default=1)
@@ -47,7 +51,13 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if os.path.exists(args.dataset):
-        X, y = load_libsvm(args.dataset)
+        # padded_csc: load sparse (csr for the sharded placer, which
+        # re-pads per shard) and never touch the dense (s, n) form.
+        if args.layout == "padded_csc":
+            file_layout = "csr" if args.sharded else "padded_csc"
+        else:
+            file_layout = "dense"
+        X, y = load_libsvm(args.dataset, layout=file_layout)
         c = args.c or 1.0
         Xte = yte = None
     else:
@@ -67,11 +77,13 @@ def main(argv=None):
             loss_name=args.loss, seed=args.seed)
         w, f, conv, k, hist = solve_sharded(X, y, mesh, cfg,
                                             max_outer=args.max_outer,
-                                            tol_kkt=args.tol)
+                                            tol_kkt=args.tol,
+                                            layout=args.layout)
         history = hist
         nnz = int(np.sum(np.asarray(w) != 0))
     else:
-        prob = make_problem(X, y, c=c, loss=args.loss)
+        prob = make_problem(X, y, c=c, loss=args.loss,
+                            layout=args.layout)
         if args.solver == "pcdn":
             res = solve(prob, PCDNConfig(P=args.P, max_outer=args.max_outer,
                                          tol_kkt=args.tol, seed=args.seed))

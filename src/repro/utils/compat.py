@@ -1,0 +1,18 @@
+"""Version-compat shims for jax APIs that moved between releases."""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5 promotes shard_map out of experimental
+    _shard_map_impl = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """jax.shard_map across jax versions; `check` maps to check_vma (new)
+    or check_rep (0.4.x experimental)."""
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **{_CHECK_KW: check})

@@ -48,6 +48,47 @@ def test_pcdn_direction_dtypes(dtype):
     np.testing.assert_allclose(d1, d2, rtol=tol, atol=tol)
 
 
+# -- pcdn_sparse_direction ----------------------------------------------------
+
+@pytest.mark.parametrize("s,P,k", [(64, 8, 4), (512, 128, 16), (300, 37, 9),
+                                   (100, 130, 3)])
+@pytest.mark.parametrize("l2", [0.0, 0.3])
+def test_pcdn_sparse_direction_shapes(s, P, k, l2):
+    rows = jnp.asarray(RNG.integers(0, s + 1, size=(P, k)), jnp.int32)
+    vals = _arr((P, k)) * (rows < s)      # sentinel slots carry value 0
+    u = _arr((s,))
+    v = _arr((s,), positive=True)
+    w = _arr((P,))
+    d1, g1, h1 = ops.pcdn_sparse_direction(rows, vals, u, v, w, l2=l2)
+    d2, g2, h2 = ref.pcdn_sparse_direction_ref(rows, vals, u, v, w, l2=l2)
+    np.testing.assert_allclose(g1, g2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h1, h2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(d1, d2, rtol=2e-3, atol=2e-4)
+
+
+def test_pcdn_sparse_direction_matches_dense_kernel():
+    """Same bundle expressed both ways -> same (d, g, h)."""
+    s, P = 128, 32
+    X = np.asarray(_arr((s, P))) * (RNG.random((s, P)) < 0.1)
+    XB = jnp.asarray(X, jnp.float32)
+    k = max(1, int((X != 0).sum(axis=0).max()))
+    rows = np.full((P, k), s, np.int64)
+    vals = np.zeros((P, k), np.float32)
+    for j in range(P):
+        nz = np.nonzero(X[:, j])[0]
+        rows[j, :len(nz)] = nz
+        vals[j, :len(nz)] = X[nz, j]
+    u = _arr((s,))
+    v = _arr((s,), positive=True)
+    w = _arr((P,))
+    d1, g1, h1 = ops.pcdn_direction(XB, u, v, w)
+    d2, g2, h2 = ops.pcdn_sparse_direction(
+        jnp.asarray(rows, jnp.int32), jnp.asarray(vals), u, v, w)
+    np.testing.assert_allclose(g1, g2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h1, h2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(d1, d2, rtol=2e-3, atol=2e-4)
+
+
 # -- pcdn_linesearch ----------------------------------------------------------
 
 @pytest.mark.parametrize("s", [64, 1000, 4096, 33])

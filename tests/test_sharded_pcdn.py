@@ -31,12 +31,25 @@ res = solve(prob, PCDNConfig(P=64, max_outer=40))
 rel = abs(f - res.objective) / abs(res.objective)
 assert rel < 1e-4, (f, res.objective)
 
+# padded-CSC sparse layout: identical collective schedule, same answer
+ws, fs, convs, ks, _ = solve_sharded(X, y, mesh, cfg, max_outer=40,
+                                     layout="padded_csc")
+assert convs, "sparse sharded PCDN must converge"
+assert abs(fs - res.objective) / abs(res.objective) < 1e-4, (fs,
+                                                            res.objective)
+
 # multi-pod (3-axis) mesh
 mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg3 = ShardedPCDNConfig(P_local=32, c=1.0, data_axes=("pod", "data"))
 w3, f3, conv3, k3, _ = solve_sharded(X, y, mesh3, cfg3, max_outer=40)
 assert conv3
 assert abs(f3 - res.objective) / abs(res.objective) < 1e-4
+
+# multi-pod sparse
+w4, f4, conv4, k4, _ = solve_sharded(X, y, mesh3, cfg3, max_outer=40,
+                                     layout="padded_csc")
+assert conv4
+assert abs(f4 - res.objective) / abs(res.objective) < 1e-4
 print("SHARDED_OK")
 """
 
