@@ -5,6 +5,18 @@
 Generates a real-sim-profile dataset, runs PCDN at high parallelism
 (P = n/8), and verifies monotone descent + a sparse solution — the
 paper's headline behaviour — then compares against CDN (P = 1).
+
+Need the whole regularization path instead of one c? The path engine
+(DESIGN.md section 8) sweeps a geometric c-grid from the analytic c_max
+with warm starts and active-set shrinking, one compiled program for all
+points:
+
+    from repro.path import PathConfig, run_path
+    cfg = PathConfig(solver=PCDNConfig(P=256, shrink=True), n_points=20)
+    res = run_path(prob, cfg, val_design=Xte, val_y=yte)
+    print(res.best.c, res.best.val_accuracy)   # model selection done
+
+See examples/regularization_path.py and `python -m repro.launch.path`.
 """
 import time
 

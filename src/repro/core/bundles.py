@@ -26,6 +26,32 @@ def partition(key: Array, n: int, P: int) -> Array:
     return jnp.concatenate([perm, pad]).reshape(b, P).astype(jnp.int32)
 
 
+def partition_active(key: Array, active: Array, P: int) -> tuple[Array, Array]:
+    """Active-set partition for the shrinking solver (DESIGN.md section 8.2).
+
+    active: (n,) bool mask of un-shrunk features. Returns (idxs, b_active):
+    idxs is the same static (b, P) layout as `partition`, but a fresh
+    random permutation is stably reordered so every ACTIVE feature lands
+    in the leading ceil(n_active / P) bundles (random order within the
+    active block); all inactive/pad slots hold the sentinel n and are
+    masked out of bundle math exactly like ragged-tail padding. b_active
+    is the dynamic number of leading bundles that contain any work — the
+    solver's fori_loop trip count, so shrunk features cost zero compute
+    while every shape stays static.
+    """
+    n = active.shape[0]
+    b = num_bundles(n, P)
+    perm = jax.random.permutation(key, n)
+    order = jnp.argsort(~active[perm], stable=True)   # actives first
+    perm = perm[order]
+    flat = jnp.where(active[perm], perm, n)
+    pad = jnp.full((b * P - n,), n, dtype=flat.dtype)
+    idxs = jnp.concatenate([flat, pad]).reshape(b, P).astype(jnp.int32)
+    n_active = jnp.sum(active.astype(jnp.int32))
+    b_active = (n_active + P - 1) // P
+    return idxs, b_active
+
+
 def gather_slab(X: Array, idx: Array) -> tuple[Array, Array]:
     """Gather the dense (s, P) column slab for one bundle from a raw array.
 

@@ -43,6 +43,10 @@ class PCDNConfig:
     ls_kind: str = "batched"     # "batched" (TPU-native) | "backtracking" (faithful)
     seed: int = 0
     use_kernels: bool = False    # route bundle math through Pallas kernels
+    # -- active-set shrinking (CDN heritage; DESIGN.md section 8.2) ----------
+    shrink: bool = False         # mask near-optimal zero features out of bundles
+    shrink_tol: float = 0.01     # shrink j when w_j == 0 and |g_j| < 1 - shrink_tol
+    recheck_every: int = 1       # full-set KKT recheck period (un-shrinks violators)
 
 
 def cdn_config(**kw) -> PCDNConfig:
@@ -58,6 +62,7 @@ class SolveHistory(NamedTuple):
     nnz: np.ndarray            # (K,) number of nonzeros in w
     ls_steps: np.ndarray       # (K,) mean line-search steps per bundle
     wall_time: np.ndarray      # (K,) cumulative seconds
+    n_active: np.ndarray       # (K,) un-shrunk features (== n without shrink)
 
 
 class SolveResult(NamedTuple):
@@ -130,24 +135,96 @@ def make_outer_iteration(problem: L1Problem, cfg: PCDNConfig):
     return jax.jit(outer)
 
 
-def solve(problem: L1Problem, cfg: PCDNConfig,
-          w0: Optional[Array] = None,
-          f_star: Optional[float] = None,
-          callback: Optional[Callable] = None) -> SolveResult:
-    """Run PCDN until the KKT (or relative-objective) stop or max_outer."""
-    n = problem.n_features
-    w = jnp.zeros((n,), problem.dtype) if w0 is None else w0
-    z = problem.margins(w)
-    key = jax.random.PRNGKey(cfg.seed)
-    outer = make_outer_iteration(problem, cfg)
+def make_path_outer(problem: L1Problem, cfg: PCDNConfig):
+    """The regularization-path engine's outer iteration (DESIGN.md section 8).
 
+    A single jitted function reused across every path point and shrink
+    state — none of the quantities that vary along a λ-sweep is baked in:
+
+        outer(w, z, key, active, recheck, c)
+          -> (w, z, key, f, kkt, nnz, mean_q, active, n_active)
+
+    * `c` is a traced scalar (problem.with_c substitution), so a 20-point
+      c-grid compiles ONCE instead of 20 times.
+    * `active` is the (n,) un-shrunk mask. Bundles are drawn from the
+      active set only (bundles.partition_active) and the bundle loop is a
+      fori_loop with the dynamic trip count ceil(n_active / P): shrunk
+      features keep their slots (static shapes) but cost zero compute.
+    * `kkt` is always the FULL-set violation — the full gradient is
+      already needed for the stop criterion, so the shrink bookkeeping is
+      free. Shrinking masks j when w_j == 0 and |g_j| < 1 - shrink_tol
+      (strictly interior to the l1 subdifferential box, per CDN's
+      shrinking heritage); when `recheck` is set, any feature whose
+      violation exceeds tol_kkt is un-shrunk again, so a wrongly shrunk
+      feature survives at most recheck_every outer iterations.
+
+    With cfg.shrink=False the active mask passes through untouched and
+    the bundle loop covers the full feature set — the scan-based
+    make_outer_iteration and this function then compute the same update
+    (modulo the independent random partition draw).
+    """
+    n = problem.n_features
+
+    def outer(w: Array, z: Array, key: Array, active: Array,
+              recheck: Array, c: Array):
+        prob = problem.with_c(c)
+        step = make_bundle_step(prob, cfg)
+        key, sub = jax.random.split(key)
+        if cfg.shrink:
+            idxs, b_active = B.partition_active(sub, active, cfg.P)
+
+            def body(t, carry):
+                (w, z), q_sum = carry
+                (w, z), (q, _alpha) = step((w, z), idxs[t])
+                return (w, z), q_sum + q.astype(jnp.float32)
+
+            (w, z), q_sum = jax.lax.fori_loop(
+                0, b_active, body, ((w, z), jnp.float32(0.0)))
+            mean_q = q_sum / jnp.maximum(b_active, 1).astype(jnp.float32)
+        else:
+            idxs = B.partition(sub, n, cfg.P)
+            (w, z), (steps, _alphas) = jax.lax.scan(step, (w, z), idxs)
+            mean_q = jnp.mean(steps.astype(jnp.float32))
+
+        f = prob.objective_from_margins(z, w)
+        g = prob.full_grad(z, w)
+        viol = prob.kkt_violation_from_grad(w, g)
+        kkt = jnp.max(viol)
+        if cfg.shrink:
+            interior = (w == 0) & (jnp.abs(g) < 1.0 - cfg.shrink_tol)
+            active = active & ~interior
+            active = active | (recheck & (viol > cfg.tol_kkt))
+        nnz = jnp.sum(w != 0)
+        n_active = jnp.sum(active.astype(jnp.int32))
+        return w, z, key, f, kkt, nnz, mean_q, active, n_active
+
+    return jax.jit(outer)
+
+
+def run_outer_loop(problem: L1Problem, cfg: PCDNConfig, outer,
+                   w: Array, z: Array, key: Array, active: Array,
+                   c: float,
+                   f_star: Optional[float] = None,
+                   callback: Optional[Callable] = None):
+    """Host-side convergence loop around a `make_path_outer` iteration.
+
+    Shared by solve() (shrink mode) and the path driver, so the stop
+    logic (full-set KKT, optional relative-objective) and history
+    recording exist once. Returns (w, z, key, active, SolveResult).
+    """
+    c_arr = jnp.asarray(c, problem.dtype)
     hist = {k: [] for k in SolveHistory._fields}
     t0 = time.perf_counter()
     converged = False
-    f = float(problem.objective_from_margins(z, w))
+    f = float(problem.with_c(float(c)).objective_from_margins(z, w))
     k = 0
     for k in range(cfg.max_outer):
-        w, z, key, f_, kkt, nnz, mean_q = outer(w, z, key)
+        # iteration 0 always rechecks so a stale warm-started active set
+        # (e.g. carried across path points) is repaired immediately.
+        recheck = jnp.asarray(k == 0 or cfg.recheck_every <= 1
+                              or k % cfg.recheck_every == 0)
+        w, z, key, f_, kkt, nnz, mean_q, active, n_active = outer(
+            w, z, key, active, recheck, c_arr)
         f = float(f_)
         hist["outer_iter"].append(k)
         hist["objective"].append(f)
@@ -155,6 +232,7 @@ def solve(problem: L1Problem, cfg: PCDNConfig,
         hist["nnz"].append(int(nnz))
         hist["ls_steps"].append(float(mean_q))
         hist["wall_time"].append(time.perf_counter() - t0)
+        hist["n_active"].append(int(n_active))
         if callback is not None:
             callback(k, w, f, float(kkt))
         if float(kkt) <= cfg.tol_kkt:
@@ -164,7 +242,35 @@ def solve(problem: L1Problem, cfg: PCDNConfig,
             if (f - f_star) <= cfg.tol_rel_obj * abs(f_star):
                 converged = True
                 break
-
     history = SolveHistory(**{k: np.asarray(v) for k, v in hist.items()})
-    return SolveResult(w=w, objective=f, n_outer=k + 1,
-                       converged=converged, history=history)
+    result = SolveResult(w=w, objective=f, n_outer=k + 1,
+                         converged=converged, history=history)
+    return w, z, key, active, result
+
+
+def solve(problem: L1Problem, cfg: PCDNConfig,
+          w0: Optional[Array] = None,
+          f_star: Optional[float] = None,
+          callback: Optional[Callable] = None) -> SolveResult:
+    """Run PCDN until the KKT (or relative-objective) stop or max_outer."""
+    n = problem.n_features
+    w = jnp.zeros((n,), problem.dtype) if w0 is None else w0
+    z = problem.margins(w)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    if cfg.shrink:
+        outer = make_path_outer(problem, cfg)
+    else:
+        # adapt the legacy static-c iteration (identical compiled program
+        # to previous releases) to the run_outer_loop signature
+        legacy = make_outer_iteration(problem, cfg)
+
+        def outer(w, z, key, active, recheck, c):
+            w, z, key, f, kkt, nnz, mean_q = legacy(w, z, key)
+            return w, z, key, f, kkt, nnz, mean_q, active, n
+
+    active = jnp.ones((n,), bool)
+    *_, result = run_outer_loop(problem, cfg, outer, w, z, key, active,
+                                problem.c, f_star=f_star,
+                                callback=callback)
+    return result

@@ -52,6 +52,21 @@ class L1Problem:
         return cls(design=design, y=y, c=c, loss_name=loss_name,
                    elastic_net_l2=l2)
 
+    # -- trace-time substitution ---------------------------------------------
+    def with_c(self, c) -> "L1Problem":
+        """Replace the regularization weight; `c` may be a traced scalar.
+
+        `c` lives in the pytree's static aux data, so a problem carrying a
+        tracer must NOT cross a jit boundary — but substitution *inside* a
+        traced function is exactly how the path engine (DESIGN.md section
+        8) reuses one compiled outer iteration across every grid point.
+        """
+        return dataclasses.replace(self, c=c)
+
+    def with_labels(self, y: Array) -> "L1Problem":
+        """Replace labels (same design); used by the vmapped batch solver."""
+        return dataclasses.replace(self, y=y)
+
     # -- basic accessors -----------------------------------------------------
     @property
     def X(self) -> Array:
@@ -130,6 +145,17 @@ class L1Problem:
         return g
 
     # -- KKT optimality measure ----------------------------------------------
+    def kkt_violation_from_grad(self, w: Array, g: Array) -> Array:
+        """Per-feature |minimum-norm subgradient| of F_c at w, given the
+        smooth gradient g = grad L(w). (n,) nonnegative; all-zero iff w is
+        optimal. The shrinking solver and the path engine consume the
+        vector; `kkt_violation` reduces it to the scalar stop."""
+        pos = g + 1.0
+        neg = g - 1.0
+        zero = jnp.maximum(jnp.abs(g) - 1.0, 0.0)
+        v = jnp.where(w > 0, pos, jnp.where(w < 0, neg, zero))
+        return jnp.abs(v)
+
     def kkt_violation(self, w: Array, z: Optional[Array] = None) -> Array:
         """inf-norm of the minimum-norm subgradient of F_c at w.
 
@@ -141,11 +167,32 @@ class L1Problem:
         if z is None:
             z = self.margins(w)
         g = self.full_grad(z, w)
-        pos = g + 1.0
-        neg = g - 1.0
-        zero = jnp.maximum(jnp.abs(g) - 1.0, 0.0)
-        v = jnp.where(w > 0, pos, jnp.where(w < 0, neg, zero))
-        return jnp.max(jnp.abs(v))
+        return jnp.max(self.kkt_violation_from_grad(w, g))
+
+    # -- regularization path quantities ---------------------------------------
+    def c_max(self) -> float:
+        """Largest c for which w = 0 is optimal (DESIGN.md section 8.1).
+
+        At the origin every margin is zero, so the loss gradient is
+        c * X^T phi'(0, y); w = 0 satisfies the KKT conditions iff that
+        vector stays inside the l1 subdifferential box [-1, 1]^n:
+
+            c <= c_max = 1 / || X^T phi'(0, y) ||_inf
+
+        (the elastic-net quadratic vanishes at 0 and does not move this).
+        This is the analytic start of the regularization path: the paper's
+        F_c = c * L + ||w||_1 parameterization puts lambda ~ 1/c, so the
+        classical lambda_max is 1 / c_max and the path sweeps c UP from
+        c_max (all-zero model) toward weaker regularization.
+        """
+        z0 = jnp.zeros((self.n_samples,), self.dtype)
+        u0 = self.loss.dz(z0, self.y)
+        g0 = self.design.rmatvec(u0)
+        denom = float(jnp.max(jnp.abs(g0)))
+        if denom <= 0.0:
+            raise ValueError("degenerate problem: X^T phi'(0, y) == 0 "
+                             "(no feature correlates with the labels)")
+        return 1.0 / denom
 
     # -- Lemma 1 quantities ----------------------------------------------------
     def column_norms_sq(self) -> Array:
@@ -173,6 +220,20 @@ def make_problem(
     y = jnp.asarray(np.asarray(y), dtype=dtype)
     return L1Problem(design=design, y=y, c=float(c), loss_name=loss,
                      elastic_net_l2=float(elastic_net_l2))
+
+
+def validation_accuracy(design, y, w) -> float:
+    """Classification accuracy of sign(X_val @ w) against +-1 labels.
+
+    `design` may be anything `as_design` accepts (dense array, CSR,
+    DesignMatrix), so held-out metrics never densify a sparse split.
+    Zero margins count as +1, matching data.synthetic.train_accuracy.
+    """
+    d = as_design(design)
+    z = np.asarray(d.matvec(jnp.asarray(np.asarray(w), d.dtype)))
+    pred = np.sign(z)
+    pred[pred == 0] = 1.0
+    return float(np.mean(pred == np.asarray(y)))
 
 
 def expected_max_column_norm(problem: L1Problem, P: int) -> float:

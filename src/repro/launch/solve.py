@@ -25,6 +25,44 @@ from repro.data.synthetic import train_accuracy
 from repro.launch.mesh import make_host_mesh
 
 
+def sparse_weight_record(w) -> dict:
+    """JSON-compact (indices, values) form of an l1 solution — nnz-sized,
+    so a news20-scale report stays small where a dense float list would
+    be tens of MB of decimal text."""
+    w = np.asarray(w, np.float64)
+    idx = np.flatnonzero(w)
+    return {"n_features": int(w.shape[0]),
+            "w_indices": idx.tolist(),
+            "w_values": w[idx].tolist()}
+
+
+def load_warm_start(path: str, n: int, dtype) -> jnp.ndarray:
+    """Load a w0 vector from .npy, or from JSON: a dense list, or the
+    sparse {n_features, w_indices, w_values} record `--out` writes — so
+    solve runs chain."""
+    if path.endswith(".npy"):
+        w = np.asarray(np.load(path), np.float64).reshape(-1)
+    else:
+        with open(path) as fh:
+            obj = json.load(fh)
+        if isinstance(obj, dict):
+            if "w_indices" not in obj:
+                raise ValueError(
+                    f"warm start {path!r} has no weight record "
+                    f"(w_indices/w_values) — reports written by older "
+                    f"--out versions lack it; re-run the source solve "
+                    f"or pass a .npy")
+            w = np.zeros((int(obj["n_features"]),), np.float64)
+            w[np.asarray(obj["w_indices"], np.int64)] = obj["w_values"]
+        else:
+            w = np.asarray(obj, np.float64).reshape(-1)
+    if w.shape[0] != n:
+        raise ValueError(
+            f"warm start {path!r} has {w.shape[0]} features, problem "
+            f"has {n}")
+    return jnp.asarray(w, dtype)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="real-sim",
@@ -47,8 +85,21 @@ def main(argv=None):
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--warm-start", default=None, metavar="CKPT",
+                    help="w0 from a .npy vector or a JSON file (a list or "
+                         "an object with a 'w' key, e.g. a previous --out "
+                         "report); pcdn/cdn only")
+    ap.add_argument("--shrink", action="store_true",
+                    help="active-set shrinking (pcdn/cdn; DESIGN.md "
+                         "section 8.2)")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args(argv)
+    if args.warm_start and args.solver not in ("pcdn", "cdn"):
+        ap.error("--warm-start requires --solver pcdn or cdn")
+    if args.shrink and args.solver not in ("pcdn", "cdn"):
+        ap.error("--shrink requires --solver pcdn or cdn")
+    if (args.warm_start or args.shrink) and args.sharded:
+        ap.error("--warm-start/--shrink are not wired into --sharded yet")
 
     if os.path.exists(args.dataset):
         # padded_csc: load sparse (csr for the sharded placer, which
@@ -84,12 +135,16 @@ def main(argv=None):
     else:
         prob = make_problem(X, y, c=c, loss=args.loss,
                             layout=args.layout)
+        w0 = (load_warm_start(args.warm_start, prob.n_features, prob.dtype)
+              if args.warm_start else None)
         if args.solver == "pcdn":
             res = solve(prob, PCDNConfig(P=args.P, max_outer=args.max_outer,
-                                         tol_kkt=args.tol, seed=args.seed))
+                                         tol_kkt=args.tol, seed=args.seed,
+                                         shrink=args.shrink), w0=w0)
         elif args.solver == "cdn":
             res = solve(prob, cdn_config(max_outer=args.max_outer,
-                                         tol_kkt=args.tol, seed=args.seed))
+                                         tol_kkt=args.tol, seed=args.seed,
+                                         shrink=args.shrink), w0=w0)
         elif args.solver == "scdn":
             res = scdn.solve(prob, SCDNConfig(max_rounds=args.max_outer,
                                               tol_kkt=args.tol,
@@ -110,8 +165,12 @@ def main(argv=None):
         print(f"[solve] test accuracy: {acc:.4f}")
     if args.out:
         with open(args.out, "w") as fh:
+            # the sparse weight record makes the report a valid
+            # --warm-start input for the next solve (e.g. the next point
+            # of a manual c-sweep) at nnz-sized cost
             json.dump({"objective": float(f), "converged": bool(conv),
                        "nnz": nnz, "seconds": dt,
+                       **sparse_weight_record(w),
                        "history": history if isinstance(history, dict)
                        else None}, fh, indent=1)
     return f

@@ -149,11 +149,22 @@ def rope(x: Array, positions: Array, theta: float) -> Array:
 
 
 def sinusoidal_positions(n_pos: int, d: int) -> Array:
-    """Whisper-encoder style fixed sinusoids, (n_pos, d) float32."""
+    """Whisper-encoder style fixed sinusoids, (n_pos, d) float32.
+
+    Built in numpy at trace time (shapes are static) and embedded as a
+    constant. It must NOT be traced jnp math: on jax 0.4.x CPU, GSPMD
+    mispartitions the concatenate(sin(iota.f), cos(iota.f)) pattern when
+    the consumer is sharded along the feature axis — each shard evaluates
+    the wrong slice of the table (observed as a 0.14 loss delta for
+    whisper-small on a (data=2, model=4) mesh; tests/test_sharded_pcdn.py
+    guards the fixed behaviour).
+    """
+    import numpy as np
     half = d // 2
-    freqs = jnp.exp(-jnp.arange(half) * (jnp.log(10000.0) / (half - 1)))
-    ang = jnp.arange(n_pos)[:, None] * freqs[None, :]
-    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    freqs = np.exp(-np.arange(half) * (np.log(10000.0) / (half - 1)))
+    ang = np.arange(n_pos)[:, None] * freqs[None, :]
+    table = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(table, jnp.float32)
 
 
 # --- losses --------------------------------------------------------------------

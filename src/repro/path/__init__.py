@@ -1,0 +1,13 @@
+"""Regularization-path engine (DESIGN.md section 8): warm-started
+λ-sweeps over a geometric c-grid, active-set shrinking, and vmapped
+multi-problem batch solving over a shared design matrix."""
+from repro.path.batch import BatchSolveResult, make_batch_outer, solve_batch
+from repro.path.driver import (PathConfig, PathPoint, PathResult,
+                               path_summary, pick_best, run_path)
+from repro.path.grid import c_grid, problem_grid
+
+__all__ = [
+    "PathConfig", "PathPoint", "PathResult", "run_path", "path_summary",
+    "pick_best", "c_grid", "problem_grid",
+    "BatchSolveResult", "make_batch_outer", "solve_batch",
+]

@@ -1,0 +1,150 @@
+"""Warm-started regularization-path driver (DESIGN.md section 8).
+
+Solves an l1 problem along a geometric c-grid built from the analytic
+c_max, chaining (w, z, active-set) state from each point into the next.
+One `pcdn.make_path_outer` program is compiled for the whole sweep — c is
+a traced argument — so a 20-point path pays one XLA compile, not twenty,
+and each warm point typically needs a handful of outer iterations where a
+cold solve needs tens.
+
+Per point the driver records objective / nnz / full-set KKT / iteration
+and wall-time cost plus (optionally) held-out validation accuracy, and
+picks the best c by validation accuracy when a validation split is given.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pcdn
+from repro.core.pcdn import PCDNConfig
+from repro.core.problem import L1Problem, validation_accuracy
+from repro.path import grid as grid_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class PathConfig:
+    """A λ-sweep: grid geometry + the per-point PCDN solver settings."""
+
+    solver: PCDNConfig = PCDNConfig(P=256)
+    n_points: int = 20
+    span: float = 100.0                 # c_final = span * c_max when unset
+    c_final: Optional[float] = None
+    warm_start: bool = True             # chain (w, z, active) across points
+
+
+class PathPoint(NamedTuple):
+    c: float
+    objective: float
+    nnz: int
+    kkt: float
+    n_outer: int
+    seconds: Optional[float]            # wall time on this point (None in
+                                        # batch mode — lockstep solves
+                                        # have no per-point timing)
+    converged: bool
+    val_accuracy: Optional[float]       # None without a validation split
+
+
+class PathResult(NamedTuple):
+    c_max: float
+    cs: np.ndarray                      # (n_points,) ascending grid
+    points: list                        # [PathPoint]
+    weights: np.ndarray                 # (n_points, n) solutions per point
+    best_index: Optional[int]           # argmax val accuracy (ties -> sparser)
+    total_seconds: float
+
+    @property
+    def best(self) -> Optional[PathPoint]:
+        return None if self.best_index is None else self.points[self.best_index]
+
+
+def pick_best(points: Sequence[PathPoint]) -> Optional[int]:
+    """Highest validation accuracy; ties go to the sparser (smaller-c)
+    model, the usual one-standard-error-rule direction. Shared by the
+    sweep driver and the batch-mode CLI so both modes pick identically."""
+    scored = [(p.val_accuracy, -p.nnz, -i) for i, p in enumerate(points)
+              if p.val_accuracy is not None]
+    if not scored:
+        return None
+    return -max(scored)[2]
+
+
+def run_path(problem: L1Problem, cfg: PathConfig,
+             val_design=None, val_y=None,
+             verbose: bool = False, outer=None) -> PathResult:
+    """Sweep the c-grid; `problem.c` is a template value and is ignored.
+
+    val_design / val_y: optional held-out split (anything `as_design`
+    accepts) scored after each point; enables the best-c pick.
+    outer: optional prebuilt `pcdn.make_path_outer(problem, cfg.solver)`
+    — benchmarks pass an already-compiled one so warm-vs-cold timings
+    compare solver work, not XLA compile time.
+    """
+    if (val_design is None) != (val_y is None):
+        raise ValueError("pass both val_design and val_y or neither")
+    solver = cfg.solver
+    c_max = problem.c_max()
+    cs = grid_mod.c_grid(c_max, c_final=cfg.c_final, n_points=cfg.n_points,
+                         span=cfg.span)
+    if outer is None:
+        outer = pcdn.make_path_outer(problem, solver)
+
+    n = problem.n_features
+    w = jnp.zeros((n,), problem.dtype)
+    z = jnp.zeros((problem.n_samples,), problem.dtype)
+    active = jnp.ones((n,), bool)
+    key = jax.random.PRNGKey(solver.seed)
+
+    points: list[PathPoint] = []
+    weights = np.zeros((len(cs), n), np.dtype(problem.dtype))
+    t_total0 = time.perf_counter()
+    for i, c in enumerate(cs):
+        t0 = time.perf_counter()
+        if not cfg.warm_start:
+            w = jnp.zeros((n,), problem.dtype)
+            z = jnp.zeros((problem.n_samples,), problem.dtype)
+            active = jnp.ones((n,), bool)
+            key = jax.random.PRNGKey(solver.seed)
+        else:
+            # refresh margins from w once per point: O(one matvec), stops
+            # f32 z-drift from accumulating across the whole sweep
+            z = problem.margins(w)
+        w, z, key, active, res = pcdn.run_outer_loop(
+            problem, solver, outer, w, z, key, active, float(c))
+        seconds = time.perf_counter() - t0
+        val_acc = (validation_accuracy(val_design, val_y, w)
+                   if val_design is not None else None)
+        weights[i] = np.asarray(w)
+        points.append(PathPoint(
+            c=float(c), objective=res.objective,
+            nnz=int(np.count_nonzero(weights[i])),
+            kkt=float(res.history.kkt[-1]) if res.history.kkt.size else 0.0,
+            n_outer=res.n_outer, seconds=seconds,
+            converged=res.converged, val_accuracy=val_acc))
+        if verbose:
+            p = points[-1]
+            extra = f" val_acc={p.val_accuracy:.4f}" if p.val_accuracy is not None else ""
+            print(f"[path] c={p.c:.5g} F={p.objective:.5f} nnz={p.nnz} "
+                  f"kkt={p.kkt:.2e} iters={p.n_outer} "
+                  f"t={p.seconds:.2f}s{extra}", flush=True)
+
+    return PathResult(c_max=c_max, cs=cs, points=points, weights=weights,
+                      best_index=pick_best(points),
+                      total_seconds=time.perf_counter() - t_total0)
+
+
+def path_summary(result: PathResult) -> dict:
+    """JSON-ready summary (weights omitted — they go to .npy if wanted)."""
+    return {
+        "c_max": result.c_max,
+        "total_seconds": result.total_seconds,
+        "best_index": result.best_index,
+        "best_c": None if result.best is None else result.best.c,
+        "points": [p._asdict() for p in result.points],
+    }

@@ -16,3 +16,16 @@ def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
     or check_rep (0.4.x experimental)."""
     return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, **{_CHECK_KW: check})
+
+
+def cost_analysis(compiled) -> dict:
+    """`compiled.cost_analysis()` normalized to a flat dict.
+
+    jax 0.4.x returns a one-element list of dicts (one per partition /
+    executable); jax >= 0.5 returns the dict directly. Indexing the list
+    with a string key is the `TypeError: list indices must be integers`
+    that broke the HLO cost-model calibration tests."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
