@@ -16,12 +16,10 @@ is the paper's "maintain e^{w.x_i}" technique (section 3.1) in z-space.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import bundles as B
 from repro.core.design_matrix import SparseSlab
@@ -29,6 +27,9 @@ from repro.core.direction import delta_decrement, newton_direction
 from repro.core.linesearch import (ArmijoParams, armijo_backtracking,
                                    armijo_batched)
 from repro.core.problem import L1Problem
+# history/result containers + the host convergence loop live in the
+# engine layer now (DESIGN.md section 9); re-exported here for compat.
+from repro.engine.loop import SolveHistory, SolveResult  # noqa: F401
 
 Array = jax.Array
 
@@ -53,24 +54,6 @@ def cdn_config(**kw) -> PCDNConfig:
     """CDN = PCDN with bundle size 1 (paper section 2.1)."""
     kw.setdefault("ls_kind", "backtracking")
     return PCDNConfig(P=1, **kw)
-
-
-class SolveHistory(NamedTuple):
-    outer_iter: np.ndarray     # (K,)
-    objective: np.ndarray      # (K,) F_c(w) after each outer iteration
-    kkt: np.ndarray            # (K,)
-    nnz: np.ndarray            # (K,) number of nonzeros in w
-    ls_steps: np.ndarray       # (K,) mean line-search steps per bundle
-    wall_time: np.ndarray      # (K,) cumulative seconds
-    n_active: np.ndarray       # (K,) un-shrunk features (== n without shrink)
-
-
-class SolveResult(NamedTuple):
-    w: Array
-    objective: float
-    n_outer: int
-    converged: bool
-    history: SolveHistory
 
 
 def _line_search_fn(cfg: PCDNConfig) -> Callable:
@@ -119,7 +102,13 @@ def make_bundle_step(problem: L1Problem, cfg: PCDNConfig):
 
 
 def make_outer_iteration(problem: L1Problem, cfg: PCDNConfig):
-    """jit-able: one full outer iteration (all b bundles) + diagnostics."""
+    """Legacy static-c outer iteration (all b bundles) + diagnostics.
+
+    Kept for microbenchmarks that time one bare iteration (e.g.
+    benchmarks/bench_sparse.py). Solver entry points go through the
+    engine layer instead: `repro.engine.local.LocalBackend` wraps
+    `make_path_outer`, whose traced-c contract subsumes this one.
+    """
     n = problem.n_features
     step = make_bundle_step(problem, cfg)
 
@@ -136,10 +125,12 @@ def make_outer_iteration(problem: L1Problem, cfg: PCDNConfig):
 
 
 def make_path_outer(problem: L1Problem, cfg: PCDNConfig):
-    """The regularization-path engine's outer iteration (DESIGN.md section 8).
+    """The local backend's engine iteration (DESIGN.md sections 8 / 9.2).
 
-    A single jitted function reused across every path point and shrink
-    state — none of the quantities that vary along a λ-sweep is baked in:
+    Implements the engine's outer-iteration contract
+    (`repro.engine.loop`): a single jitted function reused across every
+    path point and shrink state — none of the quantities that vary along
+    a λ-sweep is baked in:
 
         outer(w, z, key, active, recheck, c)
           -> (w, z, key, f, kkt, nnz, mean_q, active, n_active)
@@ -201,76 +192,23 @@ def make_path_outer(problem: L1Problem, cfg: PCDNConfig):
     return jax.jit(outer)
 
 
-def run_outer_loop(problem: L1Problem, cfg: PCDNConfig, outer,
-                   w: Array, z: Array, key: Array, active: Array,
-                   c: float,
-                   f_star: Optional[float] = None,
-                   callback: Optional[Callable] = None):
-    """Host-side convergence loop around a `make_path_outer` iteration.
-
-    Shared by solve() (shrink mode) and the path driver, so the stop
-    logic (full-set KKT, optional relative-objective) and history
-    recording exist once. Returns (w, z, key, active, SolveResult).
-    """
-    c_arr = jnp.asarray(c, problem.dtype)
-    hist = {k: [] for k in SolveHistory._fields}
-    t0 = time.perf_counter()
-    converged = False
-    f = float(problem.with_c(float(c)).objective_from_margins(z, w))
-    k = 0
-    for k in range(cfg.max_outer):
-        # iteration 0 always rechecks so a stale warm-started active set
-        # (e.g. carried across path points) is repaired immediately.
-        recheck = jnp.asarray(k == 0 or cfg.recheck_every <= 1
-                              or k % cfg.recheck_every == 0)
-        w, z, key, f_, kkt, nnz, mean_q, active, n_active = outer(
-            w, z, key, active, recheck, c_arr)
-        f = float(f_)
-        hist["outer_iter"].append(k)
-        hist["objective"].append(f)
-        hist["kkt"].append(float(kkt))
-        hist["nnz"].append(int(nnz))
-        hist["ls_steps"].append(float(mean_q))
-        hist["wall_time"].append(time.perf_counter() - t0)
-        hist["n_active"].append(int(n_active))
-        if callback is not None:
-            callback(k, w, f, float(kkt))
-        if float(kkt) <= cfg.tol_kkt:
-            converged = True
-            break
-        if f_star is not None and cfg.tol_rel_obj > 0:
-            if (f - f_star) <= cfg.tol_rel_obj * abs(f_star):
-                converged = True
-                break
-    history = SolveHistory(**{k: np.asarray(v) for k, v in hist.items()})
-    result = SolveResult(w=w, objective=f, n_outer=k + 1,
-                         converged=converged, history=history)
-    return w, z, key, active, result
-
-
 def solve(problem: L1Problem, cfg: PCDNConfig,
           w0: Optional[Array] = None,
           f_star: Optional[float] = None,
           callback: Optional[Callable] = None) -> SolveResult:
-    """Run PCDN until the KKT (or relative-objective) stop or max_outer."""
-    n = problem.n_features
-    w = jnp.zeros((n,), problem.dtype) if w0 is None else w0
-    z = problem.margins(w)
-    key = jax.random.PRNGKey(cfg.seed)
+    """Run PCDN until the KKT (or relative-objective) stop or max_outer.
 
-    if cfg.shrink:
-        outer = make_path_outer(problem, cfg)
-    else:
-        # adapt the legacy static-c iteration (identical compiled program
-        # to previous releases) to the run_outer_loop signature
-        legacy = make_outer_iteration(problem, cfg)
+    Thin caller of the unified engine (DESIGN.md section 9): builds a
+    `LocalBackend` over this problem and hands the stop parameters to
+    `engine.loop.solve` — the same loop that drives the sharded backend
+    and the path sweeps.
+    """
+    from repro.engine import loop as engine_loop
+    from repro.engine.local import LocalBackend
 
-        def outer(w, z, key, active, recheck, c):
-            w, z, key, f, kkt, nnz, mean_q = legacy(w, z, key)
-            return w, z, key, f, kkt, nnz, mean_q, active, n
-
-    active = jnp.ones((n,), bool)
-    *_, result = run_outer_loop(problem, cfg, outer, w, z, key, active,
-                                problem.c, f_star=f_star,
-                                callback=callback)
-    return result
+    backend = LocalBackend(problem, cfg)
+    return engine_loop.solve(
+        backend, problem.c, w0=w0,
+        max_outer=cfg.max_outer, tol_kkt=cfg.tol_kkt,
+        recheck_every=cfg.recheck_every, tol_rel_obj=cfg.tol_rel_obj,
+        f_star=f_star, callback=callback)

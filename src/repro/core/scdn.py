@@ -16,7 +16,6 @@ the method diverges when Pbar exceeds the spectral threshold n/rho + 1
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import NamedTuple, Optional
 
 import jax
@@ -27,6 +26,7 @@ from repro.core import bundles as B
 from repro.core.direction import delta_decrement, newton_direction
 from repro.core.linesearch import ArmijoParams, armijo_batched
 from repro.core.problem import L1Problem
+from repro.engine.loop import EngineState, run_outer_loop
 
 Array = jax.Array
 
@@ -93,31 +93,40 @@ def make_round(problem: L1Problem, cfg: SCDNConfig):
 def solve(problem: L1Problem, cfg: SCDNConfig,
           f_star: Optional[float] = None,
           divergence_factor: float = 1e3) -> SCDNResult:
+    """Host-side round loop = the engine's shared stop/history/timing
+    helpers (DESIGN.md section 9) + SCDN's divergence guard: the Hogwild
+    semantics under study mean F_c can INCREASE, so a round whose
+    objective blows past divergence_factor * F_c(0) (or goes non-finite)
+    aborts the run and flags `diverged` instead of iterating to
+    max_rounds."""
     n = problem.n_features
-    w = jnp.zeros((n,), problem.dtype)
-    z = jnp.zeros((problem.n_samples,), problem.dtype)
-    key = jax.random.PRNGKey(cfg.seed)
     round_fn = make_round(problem, cfg)
 
-    f0 = float(problem.objective_from_margins(z, w))
-    hist = {"round": [], "objective": [], "kkt": [], "wall_time": []}
-    t0 = time.perf_counter()
-    converged = diverged = False
-    f = f0
-    k = 0
-    for k in range(cfg.max_rounds):
-        w, z, key, f_, kkt = round_fn(w, z, key)
-        f = float(f_)
-        hist["round"].append(k)
-        hist["objective"].append(f)
-        hist["kkt"].append(float(kkt))
-        hist["wall_time"].append(time.perf_counter() - t0)
-        if not np.isfinite(f) or f > divergence_factor * f0:
-            diverged = True
-            break
-        if float(kkt) <= cfg.tol_kkt:
-            converged = True
-            break
-    return SCDNResult(w=w, objective=f, n_rounds=k + 1,
-                      converged=converged, diverged=diverged,
-                      history={k_: np.asarray(v) for k_, v in hist.items()})
+    def outer(w, z, key, active, recheck, c):
+        """Adapt the SCDN round to the engine's outer contract; the
+        racing updates have no shrinking or traced-c story, so `active`
+        passes through and `c`/`recheck` are unused (the round closes
+        over problem.c)."""
+        w, z, key, f, kkt = round_fn(w, z, key)
+        return (w, z, key, f, kkt, jnp.sum(w != 0), jnp.float32(0.0),
+                active, jnp.int32(n))
+
+    state = EngineState(
+        w=jnp.zeros((n,), problem.dtype),
+        z=jnp.zeros((problem.n_samples,), problem.dtype),
+        key=jax.random.PRNGKey(cfg.seed),
+        active=jnp.ones((n,), bool))
+    f0 = float(problem.objective_from_margins(state.z, state.w))
+
+    def guard(f: float) -> bool:
+        return (not np.isfinite(f)) or f > divergence_factor * f0
+
+    _, res = run_outer_loop(outer, state, problem.c,
+                            max_outer=cfg.max_rounds, tol_kkt=cfg.tol_kkt,
+                            divergence_guard=guard)
+    h = res.history
+    return SCDNResult(w=res.w, objective=res.objective, n_rounds=res.n_outer,
+                      converged=res.converged, diverged=res.diverged,
+                      history={"round": h.outer_iter,
+                               "objective": h.objective, "kkt": h.kkt,
+                               "wall_time": h.wall_time})

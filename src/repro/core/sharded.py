@@ -1,381 +1,29 @@
-"""Distributed PCDN: 2-D (data x model) shard_map implementation.
+"""Distributed PCDN — thin compatibility layer over the unified engine.
 
-Layout (DESIGN.md section 3.4 / section 4):
+The 2-D (data x model) shard_map implementation that used to live here
+(outer iteration, collective schedule, data placers, AND its own
+convergence loop) moved to `repro.engine.sharded`, where it is an
+*execution backend* of the engine contract (DESIGN.md section 9.3):
+`ShardedBackend` exposes the same outer-iteration signature as the local
+backend, so warm-started c-sweeps, active-set shrinking and Pallas
+kernel routing now run on a mesh through the exact same drivers.
 
-    X : (s, n)  sharded  P(("pod","data"), "model")   - samples x features
-    y : (s,)    sharded  P(("pod","data"))
-    z : (s,)    sharded  P(("pod","data"))            - margins, replicated
-                                                        over "model"
-    w : (n,)    sharded  P("model")                   - replicated over data
-
-Each bundle draws P_local = P / n_model features *per model shard*
-(stratified random partition — still a disjoint cover of N per outer
-iteration, i.e. a valid Gauss-Seidel rule; see DESIGN.md section 3.4).
-
-Collective schedule per bundle iteration (3 phases, all fused to the
-minimum payload):
-
-    1. psum over data-like axes of [g_part ; h_part]   (2*P_local floats)
-    2. psum over "model" of the partial margins X_B d_B (s_local floats)
-    3. ONE psum over ALL axes of the (Q,) per-candidate Armijo vector
-       (loss part pre-divided by n_model, l1 part by n_data, so a single
-       all-axes psum yields loss-sum-over-samples + l1-sum-over-features)
-
-Phase 2 is the paper's footnote-3 reduction-sum for d.x_i, mapped onto the
-ICI; phases 1+3 carry O(P + Q) floats — the paper's low-communication
-property preserved at pod scale.
-
-Both design-matrix layouts ride the same schedule: layout="dense" shards
-the raw (s, n) array as above, layout="padded_csc" shards the padded
-feature-major sparse arrays from `shard_problem_sparse` — each shard holds
-its own columns' nonzeros with row ids local to its sample range, so the
-shard-local bundle math drops from O(s_l * P_local) to O(P_local * k_max)
-while every collective payload stays identical (DESIGN.md section 7.4).
+`solve_sharded` keeps its historical signature as a thin caller of
+`engine.loop.solve` (the old hand-rolled loop/stop/history code is
+gone). Prefer constructing a `ShardedBackend` directly when you need
+warm starts, path sweeps, or the richer `SolveResult` history.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.utils.compat import shard_map as _shard_map
-
-from repro.core import bundles as B
-from repro.core.direction import delta_decrement, newton_direction
-from repro.core.linesearch import (ArmijoParams, candidate_alphas,
-                                   select_first_satisfying)
-from repro.core.losses import HESSIAN_FLOOR, get_loss
-
-Array = jax.Array
-
-
-@dataclasses.dataclass(frozen=True)
-class ShardedPCDNConfig:
-    P_local: int                   # bundle features per model shard
-    c: float
-    loss_name: str = "logistic"
-    armijo: ArmijoParams = ArmijoParams()
-    elastic_net_l2: float = 0.0
-    data_axes: Sequence[str] = ("data",)   # ("pod","data") multi-pod
-    model_axis: str = "model"
-    seed: int = 0
-    # --- perf variants (EXPERIMENTS.md section Perf) ---
-    # "batched": one fused psum carries all Q Armijo candidates (TPU-native)
-    # "backtracking": paper-faithful sequential loop — one scalar psum per
-    #                 backtracking step (the OpenMP structure, kept as the
-    #                 reproduction baseline)
-    ls_kind: str = "batched"
-    # fuse [g;h] into one collective and [Xd;Delta] into another; the
-    # unfused variant issues 4 separate psums per bundle (baseline)
-    fuse_collectives: bool = True
-
-    @property
-    def all_axes(self):
-        return tuple(self.data_axes) + (self.model_axis,)
-
-
-def _axis_size(axis) -> Array:
-    return jax.lax.psum(1, axis)
-
-
-def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
-                       n_local: int, layout: str = "dense"):
-    """Build the jitted sharded outer-iteration fn.
-
-    layout="dense": fn(X_l, y_l, w, z, key); layout="padded_csc":
-    fn(col_rows, col_vals, y_l, w, z, key) where col_rows/col_vals are the
-    (n, D*k_max) packed per-(column, data-shard) local-row arrays from
-    `shard_problem_sparse` (DESIGN.md section 7.4). Both return
-    (w, z, f, kkt, mean_ls_steps) with identical collective schedules —
-    only the shard-local bundle math differs. n_local = features per
-    model shard (static).
-    """
-    loss = get_loss(cfg.loss_name)
-    c = cfg.c
-    gamma = cfg.armijo.gamma
-    sigma = cfg.armijo.sigma
-    P_local = cfg.P_local
-    b = -(-n_local // P_local)
-    data_axes = tuple(cfg.data_axes)
-    model_axis = cfg.model_axis
-    if layout not in ("dense", "padded_csc"):
-        raise ValueError(f"unknown layout {layout!r}")
-
-    def outer_local(*args):
-        """Runs inside shard_map: every array is this shard's block."""
-        if layout == "dense":
-            X_l, y_l, w_l, z_l, key = args
-        else:
-            rows_l, vals_l, y_l, w_l, z_l, key = args
-        s_l = z_l.shape[0]
-        n_model = _axis_size(model_axis)
-        n_data = _axis_size(data_axes)
-        m_idx = jax.lax.axis_index(model_axis)
-        # identical permutation across data shards of one model column:
-        key, sub = jax.random.split(key)
-        sub = jax.random.fold_in(sub, m_idx)
-        idxs = B.partition(sub, n_local, P_local)          # (b, P_local)
-        alphas = candidate_alphas(cfg.armijo, z_l.dtype)   # (Q,)
-
-        def gather_local(idx):
-            """-> layout-specific slab for this shard's rows of bundle B."""
-            if layout == "dense":
-                XB, _ = B.gather_slab(X_l, idx)            # (s_l, P_local)
-                return XB
-            valid = idx < n_local
-            safe = jnp.minimum(idx, n_local - 1)
-            rB = jnp.where(valid[:, None], jnp.take(rows_l, safe, axis=0),
-                           s_l)                            # (P_local, k)
-            vB = jnp.take(vals_l, safe, axis=0) * \
-                valid[:, None].astype(vals_l.dtype)
-            return rB, vB
-
-        def grad_hess_parts(slab, u, v):
-            if layout == "dense":
-                return slab.T @ u, jnp.square(slab).T @ v
-            rB, vB = slab
-            ug = jnp.take(u, rB, mode="fill", fill_value=0)
-            vg = jnp.take(v, rB, mode="fill", fill_value=0)
-            return (jnp.sum(ug * vB, axis=1),
-                    jnp.sum(vg * jnp.square(vB), axis=1))
-
-        def margin_delta_part(slab, d):
-            if layout == "dense":
-                return slab @ d
-            rB, vB = slab
-            return jnp.zeros((s_l,), vB.dtype).at[rB].add(
-                vB * d[:, None], mode="drop")
-
-        def full_grad_part(u):
-            if layout == "dense":
-                return X_l.T @ u
-            ug = jnp.take(u, rows_l, mode="fill", fill_value=0)
-            return jnp.sum(ug * vals_l, axis=1)
-
-        def bundle_step(carry, idx):
-            w_l, z_l = carry
-            slab = gather_local(idx)
-            w_B, _ = B.gather_vec(w_l, idx)
-            u = c * loss.dz(z_l, y_l)
-            v = c * loss.d2z(z_l, y_l)
-            g_part, h_part = grad_hess_parts(slab, u, v)
-            # -- phase 1: grad/hess psum over sample shards
-            if cfg.fuse_collectives:
-                gh = jax.lax.psum(jnp.concatenate([g_part, h_part]),
-                                  data_axes)
-                g, h = gh[:P_local], gh[P_local:]
-            else:  # baseline: two separate collectives
-                g = jax.lax.psum(g_part, data_axes)
-                h = jax.lax.psum(h_part, data_axes)
-            if cfg.elastic_net_l2:
-                g = g + cfg.elastic_net_l2 * w_B
-                h = h + cfg.elastic_net_l2
-            h = jnp.maximum(h, HESSIAN_FLOOR)
-            d = newton_direction(g, h, w_B)
-            # Delta (Eq. 7) sums over the *global* bundle -> psum over model
-            Delta_part = delta_decrement(g, h, w_B, d, gamma)
-            dz_part = margin_delta_part(slab, d)           # (s_l,)
-            # -- phase 2: margins of the bundle step (+ Delta when fused)
-            if cfg.fuse_collectives:
-                packed = jax.lax.psum(
-                    jnp.concatenate([dz_part, Delta_part[None]]), model_axis)
-                delta_z, Delta = packed[:-1], packed[-1]
-            else:
-                delta_z = jax.lax.psum(dz_part, model_axis)
-                Delta = jax.lax.psum(Delta_part, model_axis)
-
-            if cfg.ls_kind == "batched":
-                # -- phase 3: ONE all-axes psum of the Q-candidate vector
-                zq = z_l[None, :] + alphas[:, None] * delta_z[None, :]
-                loss_part = c * jnp.sum(
-                    loss.value(zq, y_l[None, :]) -
-                    loss.value(z_l, y_l)[None, :], axis=-1)
-                l1_part = (jnp.sum(
-                    jnp.abs(w_B[None, :] + alphas[:, None] * d[None, :]),
-                    axis=-1) - jnp.sum(jnp.abs(w_B)))
-                fused = loss_part / jnp.asarray(n_model, z_l.dtype) + \
-                    l1_part / jnp.asarray(n_data, z_l.dtype)
-                f_deltas = jax.lax.psum(fused, cfg.all_axes)
-                res = select_first_satisfying(f_deltas, alphas, Delta, sigma)
-                alpha, n_steps = res.alpha, res.n_steps
-            else:
-                # paper-faithful Algorithm 4: sequential backtracking, one
-                # scalar psum PER candidate — the latency baseline.
-                f_base = c * jnp.sum(loss.value(z_l, y_l))
-
-                def cond(st):
-                    q, alpha_, done = st
-                    return jnp.logical_and(~done, q < cfg.armijo.max_steps)
-
-                def body(st):
-                    q, alpha_, _ = st
-                    lo = c * jnp.sum(loss.value(z_l + alpha_ * delta_z,
-                                                y_l)) - f_base
-                    l1 = jnp.sum(jnp.abs(w_B + alpha_ * d)) - \
-                        jnp.sum(jnp.abs(w_B))
-                    fd = jax.lax.psum(
-                        lo / jnp.asarray(n_model, z_l.dtype) +
-                        l1 / jnp.asarray(n_data, z_l.dtype), cfg.all_axes)
-                    ok = fd <= sigma * alpha_ * Delta
-                    return (q + 1,
-                            jnp.where(ok, alpha_, alpha_ * cfg.armijo.beta),
-                            ok)
-
-                q, alpha, ok = jax.lax.while_loop(
-                    cond, body, (jnp.int32(0),
-                                 jnp.asarray(1.0, z_l.dtype),
-                                 jnp.asarray(False)))
-                alpha = jnp.where(ok, alpha, 0.0)
-                n_steps = q
-            w_l = B.scatter_add(w_l, idx, alpha * d)
-            z_l = z_l + alpha * delta_z
-            return (w_l, z_l), n_steps
-
-        (w_l, z_l), steps = jax.lax.scan(bundle_step, (w_l, z_l), idxs)
-
-        # diagnostics: objective + KKT violation (global, replicated)
-        f_loss = jax.lax.psum(c * jnp.sum(loss.value(z_l, y_l)), data_axes)
-        f_l1 = jax.lax.psum(jnp.sum(jnp.abs(w_l)), model_axis)
-        f = f_loss + f_l1
-        # full local gradient for KKT: (n_local,) psum over data
-        u = c * loss.dz(z_l, y_l)
-        g_full = jax.lax.psum(full_grad_part(u), data_axes)
-        if cfg.elastic_net_l2:
-            g_full = g_full + cfg.elastic_net_l2 * w_l
-        viol = jnp.where(
-            w_l > 0, g_full + 1.0,
-            jnp.where(w_l < 0, g_full - 1.0,
-                      jnp.maximum(jnp.abs(g_full) - 1.0, 0.0)))
-        kkt = jax.lax.pmax(jnp.max(jnp.abs(viol)), cfg.all_axes)
-        return w_l, z_l, f, kkt, jnp.mean(steps.astype(jnp.float32))
-
-    dspec = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
-
-    if layout == "dense":
-        in_specs = (P(dspec, model_axis),   # X
-                    P(dspec),               # y
-                    P(model_axis),          # w
-                    P(dspec),               # z
-                    P())                    # key (replicated)
-    else:
-        in_specs = (P(model_axis, dspec),   # col_rows (n, D*k_max)
-                    P(model_axis, dspec),   # col_vals
-                    P(dspec),               # y
-                    P(model_axis),          # w
-                    P(dspec),               # z
-                    P())                    # key (replicated)
-
-    mapped = _shard_map(
-        outer_local, mesh=mesh,
-        in_specs=in_specs,
-        out_specs=(P(model_axis), P(dspec), P(), P(), P()),
-    )
-
-    def outer(*design_and_data):
-        *rest, key = design_and_data
-        key, sub = jax.random.split(key)
-        w, z, f, kkt, q = mapped(*rest, sub)
-        return w, z, key, f, kkt, q
-
-    return jax.jit(outer)
-
-
-def shard_problem(X: np.ndarray, y: np.ndarray, mesh: Mesh,
-                  cfg: ShardedPCDNConfig):
-    """Place (X, y) and fresh (w, z) onto the mesh with the PCDN layout.
-    Pads s and n so shards are equal-sized. Returns device arrays."""
-    dspec = tuple(cfg.data_axes) if len(cfg.data_axes) > 1 else cfg.data_axes[0]
-    d_sz = int(np.prod([mesh.shape[a] for a in cfg.data_axes]))
-    m_sz = mesh.shape[cfg.model_axis]
-    s, n = X.shape
-    s_pad = (-s) % d_sz
-    n_pad = (-n) % m_sz
-    if s_pad or n_pad:
-        X = np.pad(X, ((0, s_pad), (0, n_pad)))
-        y = np.pad(y, (0, s_pad), constant_values=1.0)  # zero rows: no grad
-    Xs = jax.device_put(X, NamedSharding(mesh, P(dspec, cfg.model_axis)))
-    ys = jax.device_put(y, NamedSharding(mesh, P(dspec)))
-    w = jax.device_put(np.zeros(X.shape[1], X.dtype),
-                       NamedSharding(mesh, P(cfg.model_axis)))
-    z = jax.device_put(np.zeros(X.shape[0], X.dtype),
-                       NamedSharding(mesh, P(dspec)))
-    return Xs, ys, w, z
-
-
-def shard_problem_sparse(X, y: np.ndarray, mesh: Mesh,
-                         cfg: ShardedPCDNConfig, k_max: int = None):
-    """Sparse placer: per-(model column, data shard) padded local rows.
-
-    X: dense np array or CSR-like (.data/.indices/.indptr/.shape) — the
-    latter never densifies. Builds
-
-        col_rows : (n_pad, D * k_max) int32   local row id or sentinel s_l
-        col_vals : (n_pad, D * k_max) float32
-
-    packed so shard (di, mi) sees the (n_local, k_max) block of its own
-    columns with row ids local to its sample range — axis 0 is sharded
-    over "model", axis 1 over the data axes (DESIGN.md section 7.4).
-    k_max = max nnz of any (column, data-shard) cell unless given.
-    Returns (col_rows, col_vals, ys, w, z) device arrays.
-    """
-    dspec = tuple(cfg.data_axes) if len(cfg.data_axes) > 1 else cfg.data_axes[0]
-    d_sz = int(np.prod([mesh.shape[a] for a in cfg.data_axes]))
-    m_sz = mesh.shape[cfg.model_axis]
-
-    if all(hasattr(X, a) for a in ("data", "indices", "indptr", "shape")):
-        s, n = X.shape
-        vals = np.asarray(X.data, dtype=np.float32)
-        cols = np.asarray(X.indices, dtype=np.int64)
-        rows = np.repeat(np.arange(s, dtype=np.int64),
-                         np.diff(np.asarray(X.indptr)))
-    else:
-        X = np.asarray(X)
-        s, n = X.shape
-        rows, cols = np.nonzero(X)
-        vals = X[rows, cols].astype(np.float32)
-
-    s_pad = s + (-s) % d_sz
-    n_pad = n + (-n) % m_sz
-    s_l = s_pad // d_sz
-    y_full = np.ones((s_pad,), np.float32)  # zero rows: no gradient
-    y_full[:s] = y
-
-    # group nnz by (column, data shard) and rank within each group
-    di = rows // s_l
-    local_r = (rows % s_l).astype(np.int32)
-    group = cols * d_sz + di
-    order = np.argsort(group, kind="stable")
-    group, local_r, cols_s, vals_s = (group[order], local_r[order],
-                                      cols[order], vals[order])
-    counts = np.bincount(group, minlength=n_pad * d_sz).astype(np.int64)
-    k = int(max(1, counts.max() if counts.size else 1))
-    if k_max is not None:
-        if k > int(k_max):
-            raise ValueError(f"k_max={k_max} < max (column, shard) nnz {k}")
-        k = int(k_max)
-    start = np.concatenate([[0], np.cumsum(counts)])
-    pos = np.arange(group.shape[0], dtype=np.int64) - start[group]
-    col_rows = np.full((n_pad, d_sz * k), s_l, np.int32)
-    col_vals = np.zeros((n_pad, d_sz * k), np.float32)
-    slot = (group % d_sz) * k + pos
-    col_rows[cols_s, slot] = local_r
-    col_vals[cols_s, slot] = vals_s
-
-    rows_d = jax.device_put(
-        col_rows, NamedSharding(mesh, P(cfg.model_axis, dspec)))
-    vals_d = jax.device_put(
-        col_vals, NamedSharding(mesh, P(cfg.model_axis, dspec)))
-    ys = jax.device_put(y_full, NamedSharding(mesh, P(dspec)))
-    w = jax.device_put(np.zeros(n_pad, np.float32),
-                       NamedSharding(mesh, P(cfg.model_axis)))
-    z = jax.device_put(np.zeros(s_pad, np.float32),
-                       NamedSharding(mesh, P(dspec)))
-    return rows_d, vals_d, ys, w, z
+from repro.engine import loop as engine_loop
+from repro.engine.sharded import (ShardedBackend, ShardedPCDNConfig,  # noqa: F401
+                                  make_sharded_margins, make_sharded_outer,
+                                  shard_problem, shard_problem_sparse)
 
 
 def solve_sharded(X, y: np.ndarray, mesh: Mesh,
@@ -385,34 +33,18 @@ def solve_sharded(X, y: np.ndarray, mesh: Mesh,
     """Host driver mirroring repro.core.pcdn.solve on a mesh.
 
     layout="auto" picks padded_csc for CSR-like X and dense for arrays;
-    either can be forced (forcing a CSR dense is refused upstream)."""
-    is_csr = all(hasattr(X, a) for a in ("data", "indices", "indptr",
-                                         "shape"))
-    if layout == "auto":
-        layout = "padded_csc" if is_csr else "dense"
-    if layout == "dense":
-        if is_csr:
-            raise ValueError("CSR input with layout='dense' would densify")
-        Xs, ys, w, z = shard_problem(X, y, mesh, cfg)
-        design = (Xs,)
-        n_feat = Xs.shape[1]
-    else:
-        rows_d, vals_d, ys, w, z = shard_problem_sparse(X, y, mesh, cfg,
-                                                        k_max=k_max)
-        design = (rows_d, vals_d)
-        n_feat = rows_d.shape[0]
-    n_local = n_feat // mesh.shape[cfg.model_axis]
-    outer = make_sharded_outer(cfg, mesh, n_local, layout=layout)
-    key = jax.random.PRNGKey(cfg.seed)
-    hist = {"objective": [], "kkt": []}
-    f = kkt = None
-    converged = False
-    k = 0
-    for k in range(max_outer):
-        w, z, key, f, kkt, q = outer(*design, ys, w, z, key)
-        hist["objective"].append(float(f))
-        hist["kkt"].append(float(kkt))
-        if float(kkt) <= tol_kkt:
-            converged = True
-            break
-    return w, float(f), converged, k + 1, hist
+    either can be forced (forcing a CSR dense is refused upstream).
+    Returns (w, objective, converged, n_outer, hist) — w is the padded
+    mesh-placed vector (use `ShardedBackend.host_weights` for the real-n
+    host copy).
+    """
+    # keep the un-shrink threshold in lockstep with the stop tolerance
+    cfg = dataclasses.replace(cfg, tol_kkt=tol_kkt)
+    backend = ShardedBackend(X, y, mesh, cfg, layout=layout, k_max=k_max)
+    result = engine_loop.solve(backend, cfg.c,
+                               max_outer=max_outer, tol_kkt=tol_kkt,
+                               recheck_every=cfg.recheck_every)
+    hist = {"objective": [float(v) for v in result.history.objective],
+            "kkt": [float(v) for v in result.history.kkt]}
+    return result.w, result.objective, result.converged, result.n_outer, \
+        hist

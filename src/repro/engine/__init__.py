@@ -1,0 +1,20 @@
+"""Unified solver engine (DESIGN.md section 9): ONE outer-iteration
+contract — carry (w, z, key, active), full-gradient KKT stopping, history
+and wall-clock bookkeeping — behind pluggable execution backends, so path
+sweeps, active-set shrinking, warm starts and Pallas kernels compose with
+both the single-program and the sharded-mesh substrates."""
+from repro.engine.loop import (EngineState, ExecutionBackend, SolveHistory,
+                               SolveResult, run_lockstep_loop,
+                               run_outer_loop, solve)
+from repro.engine.local import LocalBackend
+from repro.engine.sharded import (ShardedBackend, ShardedPCDNConfig,
+                                  make_sharded_margins, make_sharded_outer,
+                                  shard_problem, shard_problem_sparse)
+
+__all__ = [
+    "EngineState", "ExecutionBackend", "SolveHistory", "SolveResult",
+    "run_outer_loop", "run_lockstep_loop", "solve",
+    "LocalBackend",
+    "ShardedBackend", "ShardedPCDNConfig", "make_sharded_outer",
+    "make_sharded_margins", "shard_problem", "shard_problem_sparse",
+]

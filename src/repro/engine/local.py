@@ -1,0 +1,73 @@
+"""Local execution backend: one single-program XLA computation per outer
+iteration (DESIGN.md section 9.2).
+
+Wraps `pcdn.make_bundle_step` / `pcdn.make_path_outer` — dense or
+padded-CSC design matrices, optional fused Pallas kernels, active-set
+shrinking — behind the engine's backend contract, so the same drivers
+(`engine.loop.solve`, `path.driver.run_path`) run here or on a sharded
+mesh without change.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import L1Problem
+from repro.engine.loop import EngineState
+
+Array = jax.Array
+
+
+class LocalBackend:
+    """Execution backend over a host-resident `L1Problem`.
+
+    cfg: a `pcdn.PCDNConfig`. outer=: optional prebuilt
+    `pcdn.make_path_outer(problem, cfg)` — benchmarks pass an
+    already-compiled one so warm-vs-cold timings compare solver work,
+    not XLA compile time.
+    """
+
+    def __init__(self, problem: L1Problem, cfg, outer=None):
+        # deferred import: core.pcdn re-exports engine types, and the
+        # engine package initializes this module — a top-level import
+        # here would close the cycle before either side finishes.
+        from repro.core import pcdn
+        self.problem = problem
+        self.cfg = cfg
+        self.outer = (outer if outer is not None
+                      else pcdn.make_path_outer(problem, cfg))
+
+    @property
+    def n_features(self) -> int:
+        return self.problem.n_features
+
+    @property
+    def n_samples(self) -> int:
+        return self.problem.n_samples
+
+    @property
+    def dtype(self):
+        return self.problem.dtype
+
+    def init_state(self, w0: Optional[Array] = None) -> EngineState:
+        n, s = self.n_features, self.n_samples
+        if w0 is None:
+            w = jnp.zeros((n,), self.dtype)
+            z = jnp.zeros((s,), self.dtype)
+        else:
+            w = jnp.asarray(w0, self.dtype)
+            z = self.problem.margins(w)
+        return EngineState(w=w, z=z, key=jax.random.PRNGKey(self.cfg.seed),
+                           active=jnp.ones((n,), bool))
+
+    def margins(self, w: Array) -> Array:
+        return self.problem.margins(w)
+
+    def c_max(self) -> float:
+        return self.problem.c_max()
+
+    def host_weights(self, w: Array) -> np.ndarray:
+        return np.asarray(w)

@@ -1,0 +1,227 @@
+"""Unified solver engine: the outer-iteration contract (DESIGN.md section 9).
+
+Every PCDN-family solver in this repo is a host-side convergence loop
+around one jitted "outer iteration". Before the engine existed that loop
+— carry threading, full-gradient KKT stopping, history recording,
+wall-clock bookkeeping — was re-implemented by pcdn.solve, the sharded
+solver, SCDN and the path driver. It now exists ONCE, here, behind a
+pluggable *execution backend* interface:
+
+    outer(w, z, key, active, recheck, c)
+      -> (w, z, key, f, kkt, nnz, mean_q, active, n_active)
+
+* ``(w, z, key, active)`` is the solver carry (`EngineState`): weights,
+  per-sample margins z = X w, the PRNG chain for bundle partitions, and
+  the un-shrunk feature mask.
+* ``recheck`` (traced bool) asks the iteration to un-shrink any feature
+  whose full-set KKT violation exceeds tolerance.
+* ``c`` is a TRACED regularization scalar, so one compiled program
+  serves a whole warm-started c-sweep (the dynamic-c contract of
+  DESIGN.md section 8).
+* ``kkt`` must be the FULL-set violation — the stop criterion is
+  backend-independent.
+
+Backends (duck-typed; see `ExecutionBackend`):
+
+* `repro.engine.local.LocalBackend` — single XLA program wrapping
+  `pcdn.make_bundle_step` / `pcdn.make_path_outer` (dense or padded-CSC
+  design, optional fused Pallas kernels).
+* `repro.engine.sharded.ShardedBackend` — the 2-D (data x model)
+  shard_map implementation, same contract, so path sweeps, shrinking
+  and warm starts run unchanged on a multi-device mesh.
+
+`pcdn.solve`, `core.sharded.solve_sharded`, `path.driver.run_path`,
+`path.batch.solve_batch`, and `scdn.solve` are all thin callers of the
+helpers in this module.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, NamedTuple, Optional, Protocol, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class EngineState(NamedTuple):
+    """The backend-independent solver carry."""
+
+    w: Array        # (n,) weights (backend-native placement)
+    z: Array        # (s,) margins X w
+    key: Array      # PRNG key chain for bundle partitions
+    active: Array   # (n,) bool un-shrunk mask (all-True without shrinking)
+
+
+class SolveHistory(NamedTuple):
+    outer_iter: np.ndarray     # (K,)
+    objective: np.ndarray      # (K,) F_c(w) after each outer iteration
+    kkt: np.ndarray            # (K,)
+    nnz: np.ndarray            # (K,) number of nonzeros in w
+    ls_steps: np.ndarray       # (K,) mean line-search steps per bundle
+    wall_time: np.ndarray      # (K,) cumulative seconds
+    n_active: np.ndarray       # (K,) un-shrunk features (== n without shrink)
+
+
+class SolveResult(NamedTuple):
+    w: Array
+    objective: float
+    n_outer: int
+    converged: bool
+    history: SolveHistory
+    diverged: bool = False     # only set by solvers with a divergence guard
+
+
+class ExecutionBackend(Protocol):
+    """What the engine needs from an execution substrate (duck-typed).
+
+    `outer` is the jitted iteration described in the module docstring.
+    The remaining methods let drivers stay placement-agnostic: a local
+    backend hands out plain jnp arrays, the sharded backend hands out
+    mesh-placed (and feature-padded) arrays — callers never see the
+    difference.
+    """
+
+    outer: Callable  # (w, z, key, active, recheck, c) -> 9-tuple
+
+    @property
+    def n_features(self) -> int: ...          # REAL feature count (unpadded)
+
+    @property
+    def dtype(self): ...
+
+    def init_state(self, w0=None) -> EngineState: ...
+
+    def margins(self, w: Array) -> Array: ...  # recompute z = X w
+
+    def c_max(self) -> float: ...              # analytic path start
+
+    def host_weights(self, w: Array) -> np.ndarray: ...  # (n_features,) host
+
+
+def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
+                   max_outer: int, tol_kkt: float,
+                   recheck_every: int = 1, tol_rel_obj: float = 0.0,
+                   f_star: Optional[float] = None,
+                   callback: Optional[Callable] = None,
+                   divergence_guard: Optional[Callable[[float], bool]] = None,
+                   ) -> Tuple[EngineState, SolveResult]:
+    """Host-side convergence loop around a backend outer iteration.
+
+    The single implementation of the stop logic (full-set KKT, optional
+    relative-objective, optional divergence guard) and of history /
+    wall-clock recording. Returns (state, SolveResult).
+
+    divergence_guard(f) -> True aborts the loop and flags the result as
+    diverged (SCDN's Hogwild semantics); converged stays False.
+    """
+    w, z, key, active = state
+    c_arr = jnp.asarray(c, w.dtype)
+    hist = {k: [] for k in SolveHistory._fields}
+    t0 = time.perf_counter()
+    converged = diverged = False
+    f = float("nan")
+    k = 0
+    for k in range(max_outer):
+        # iteration 0 always rechecks so a stale warm-started active set
+        # (e.g. carried across path points) is repaired immediately.
+        recheck = jnp.asarray(k == 0 or recheck_every <= 1
+                              or k % recheck_every == 0)
+        w, z, key, f_, kkt, nnz, mean_q, active, n_active = outer(
+            w, z, key, active, recheck, c_arr)
+        f = float(f_)
+        hist["outer_iter"].append(k)
+        hist["objective"].append(f)
+        hist["kkt"].append(float(kkt))
+        hist["nnz"].append(int(nnz))
+        hist["ls_steps"].append(float(mean_q))
+        hist["wall_time"].append(time.perf_counter() - t0)
+        hist["n_active"].append(int(n_active))
+        if callback is not None:
+            callback(k, w, f, float(kkt))
+        if divergence_guard is not None and divergence_guard(f):
+            diverged = True
+            break
+        if float(kkt) <= tol_kkt:
+            converged = True
+            break
+        if f_star is not None and tol_rel_obj > 0:
+            if (f - f_star) <= tol_rel_obj * abs(f_star):
+                converged = True
+                break
+    history = SolveHistory(**{k_: np.asarray(v) for k_, v in hist.items()})
+    result = SolveResult(w=w, objective=f, n_outer=k + 1,
+                         converged=converged, history=history,
+                         diverged=diverged)
+    return EngineState(w, z, key, active), result
+
+
+def check_shrink_stop_consistency(backend, tol_kkt: float):
+    """A shrinking backend bakes its UN-shrink threshold (cfg.tol_kkt)
+    into the compiled iteration; driving it with a TIGHTER stop tolerance
+    would let a feature with violation in (tol_kkt, cfg.tol_kkt] stay
+    shrunk forever while the loop never reaches its stop — a silent
+    max_outer burn. Refuse loudly instead."""
+    cfg = getattr(backend, "cfg", None)
+    if cfg is None or not getattr(cfg, "shrink", False):
+        return
+    un_shrink = getattr(cfg, "tol_kkt", None)
+    if un_shrink is not None and tol_kkt < un_shrink:
+        raise ValueError(
+            f"stop tol_kkt={tol_kkt} is tighter than the backend's "
+            f"compiled un-shrink threshold cfg.tol_kkt={un_shrink}; a "
+            f"shrunk feature between them would never be reactivated. "
+            f"Rebuild the backend with cfg.tol_kkt <= the stop tolerance.")
+
+
+def solve(backend, c: float, w0=None, *,
+          max_outer: int, tol_kkt: float, recheck_every: int = 1,
+          tol_rel_obj: float = 0.0, f_star: Optional[float] = None,
+          callback: Optional[Callable] = None) -> SolveResult:
+    """One full solve on a backend: init state, loop to the KKT stop."""
+    check_shrink_stop_consistency(backend, tol_kkt)
+    state = backend.init_state(w0)
+    _, result = run_outer_loop(
+        backend.outer, state, c, max_outer=max_outer, tol_kkt=tol_kkt,
+        recheck_every=recheck_every, tol_rel_obj=tol_rel_obj,
+        f_star=f_star, callback=callback)
+    return result
+
+
+def run_lockstep_loop(outer: Callable, carry: Sequence[Array],
+                      extra: Sequence, *, max_outer: int, tol_kkt: float,
+                      dtype):
+    """Freeze-on-convergence lockstep loop over B problems (vmap batching
+    contract, DESIGN.md section 8.3).
+
+    outer(*carry, *extra) must return (*carry', f, kkt, nnz), every array
+    B-leading. A problem whose KKT drops below tol is frozen: its carry
+    is re-selected (not updated) on later iterations, so its result is
+    bit-identical to stopping while stragglers keep iterating.
+
+    Returns (carry, f, kkt, nnz, n_outer, done).
+    """
+    carry = tuple(carry)
+    batch = carry[0].shape[0]
+    done = jnp.zeros((batch,), bool)
+    n_outer = jnp.zeros((batch,), jnp.int32)
+    f = jnp.full((batch,), jnp.inf, dtype)
+    kkt = jnp.full((batch,), jnp.inf, dtype)
+    nnz = jnp.zeros((batch,), jnp.int32)
+    for _ in range(max_outer):
+        out = outer(*carry, *extra)
+        new_carry, (f_n, kkt_n, nnz_n) = out[:-3], out[-3:]
+        carry = tuple(
+            jnp.where(done.reshape((batch,) + (1,) * (old.ndim - 1)),
+                      old, new)
+            for old, new in zip(carry, new_carry))
+        f = jnp.where(done, f, f_n)
+        kkt = jnp.where(done, kkt, kkt_n)
+        nnz = jnp.where(done, nnz, nnz_n)
+        n_outer = jnp.where(done, n_outer, n_outer + 1)
+        done = done | (kkt <= tol_kkt)
+        if bool(jnp.all(done)):
+            break
+    return carry, f, kkt, nnz, n_outer, done

@@ -1,0 +1,151 @@
+"""Shared CLI plumbing for `repro.launch.solve` and `repro.launch.path`.
+
+One place defines the flags both drivers share — `--backend / --layout /
+--shrink / --warm-start / --use-kernels` plus the solver stop knobs and
+the mesh shape — and one place builds the solver configs and execution
+backends from them, so the flags behave identically in both CLIs
+(DESIGN.md section 9.4).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PCDNConfig, make_problem
+from repro.data import load_libsvm, paper_like
+from repro.engine import LocalBackend, ShardedBackend, ShardedPCDNConfig
+from repro.launch.mesh import make_host_mesh
+
+
+def add_backend_args(ap: argparse.ArgumentParser):
+    """Execution-backend selection, identical in both CLIs."""
+    ap.add_argument("--backend", default="local",
+                    choices=["local", "sharded"],
+                    help="execution backend (DESIGN.md section 9): local "
+                         "single-program XLA, or the shard_map mesh "
+                         "implementation")
+    ap.add_argument("--layout", default="auto",
+                    choices=["auto", "dense", "padded_csc"],
+                    help="design-matrix backend; padded_csc never "
+                         "densifies a .libsvm input (DESIGN.md section 7)")
+    ap.add_argument("--data-parallel", type=int, default=1,
+                    help="mesh data-axis size (--backend sharded)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="mesh model-axis size (--backend sharded)")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="route bundle math through the fused Pallas "
+                         "direction kernels (both backends)")
+
+
+def add_solver_args(ap: argparse.ArgumentParser):
+    """PCDN knobs shared by the single-solve and the path drivers."""
+    ap.add_argument("--P", type=int, default=256, help="bundle size")
+    ap.add_argument("--tol", type=float, default=1e-3)
+    ap.add_argument("--max-outer", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shrink", action="store_true",
+                    help="active-set shrinking (DESIGN.md section 8.2; "
+                         "both backends)")
+    ap.add_argument("--warm-start", default=None, metavar="CKPT",
+                    help="w0 from a .npy vector or a JSON file (a dense "
+                         "list or the sparse weight record a previous "
+                         "--out report carries); both backends")
+
+
+def load_dataset(args, with_test: bool = False):
+    """-> (X, y, Xte, yte, spec). File datasets have no test split and a
+    None spec; profile names go through `paper_like`. Honors the layout /
+    backend interplay: a padded_csc file load stays CSR for the sharded
+    placer (which re-packs per shard) and pre-packs padded-CSC locally.
+    """
+    scale = getattr(args, "scale", None)
+    if os.path.exists(args.dataset):
+        if args.layout == "padded_csc":
+            file_layout = "csr" if args.backend == "sharded" \
+                else "padded_csc"
+        else:
+            file_layout = "dense"
+        X, y = load_libsvm(args.dataset, layout=file_layout)
+        return X, y, None, None, None
+    if with_test:
+        Xtr, ytr, Xte, yte, spec = paper_like(args.dataset, with_test=True,
+                                              seed=args.seed, scale=scale)
+        return Xtr, ytr, Xte, yte, spec
+    X, y, spec = paper_like(args.dataset, seed=args.seed, scale=scale)
+    return X, y, None, None, spec
+
+
+def build_pcdn_config(args, **overrides) -> PCDNConfig:
+    """The local-backend solver config (also the stop parameters every
+    backend uses — max_outer / tol_kkt come from here)."""
+    kw = dict(P=args.P, max_outer=args.max_outer, tol_kkt=args.tol,
+              seed=args.seed, shrink=args.shrink,
+              use_kernels=args.use_kernels)
+    kw.update(overrides)
+    return PCDNConfig(**kw)
+
+
+def build_sharded_config(args, c: float, loss: str) -> ShardedPCDNConfig:
+    """Mirror the CLI flags onto the sharded backend's config so
+    --shrink / --use-kernels / --tol mean the same thing on a mesh."""
+    return ShardedPCDNConfig(
+        P_local=max(args.P // max(args.model_parallel, 1), 1), c=c,
+        loss_name=loss, seed=args.seed, shrink=args.shrink,
+        use_kernels=args.use_kernels, tol_kkt=args.tol)
+
+
+def make_backend(args, X, y, c: float, loss: str, outer=None):
+    """Build the execution backend the flags describe.
+
+    local: an `L1Problem` + `LocalBackend`; sharded: a host mesh of
+    --data-parallel x --model-parallel devices + `ShardedBackend`.
+    Returns (backend, problem_or_None).
+    """
+    if args.backend == "sharded":
+        mesh = make_host_mesh(args.data_parallel, args.model_parallel)
+        cfg = build_sharded_config(args, c, loss)
+        return ShardedBackend(X, y, mesh, cfg, layout=args.layout), None
+    prob = make_problem(X, y, c=c, loss=loss, layout=args.layout)
+    return LocalBackend(prob, build_pcdn_config(args), outer=outer), prob
+
+
+def load_warm_start(path: str, n: int, dtype) -> jnp.ndarray:
+    """Load a w0 vector from .npy, or from JSON: a dense list, or the
+    sparse {n_features, w_indices, w_values} record `--out` writes — so
+    solve runs chain."""
+    if path.endswith(".npy"):
+        w = np.asarray(np.load(path), np.float64).reshape(-1)
+    else:
+        with open(path) as fh:
+            obj = json.load(fh)
+        if isinstance(obj, dict):
+            if "w_indices" not in obj:
+                raise ValueError(
+                    f"warm start {path!r} has no weight record "
+                    f"(w_indices/w_values) — reports written by older "
+                    f"--out versions lack it; re-run the source solve "
+                    f"or pass a .npy")
+            w = np.zeros((int(obj["n_features"]),), np.float64)
+            w[np.asarray(obj["w_indices"], np.int64)] = obj["w_values"]
+        else:
+            w = np.asarray(obj, np.float64).reshape(-1)
+    if w.shape[0] != n:
+        raise ValueError(
+            f"warm start {path!r} has {w.shape[0]} features, problem "
+            f"has {n}")
+    return jnp.asarray(w, dtype)
+
+
+def sparse_weight_record(w) -> dict:
+    """JSON-compact (indices, values) form of an l1 solution — nnz-sized,
+    so a news20-scale report stays small where a dense float list would
+    be tens of MB of decimal text."""
+    w = np.asarray(w, np.float64)
+    idx = np.flatnonzero(w)
+    return {"n_features": int(w.shape[0]),
+            "w_indices": idx.tolist(),
+            "w_values": w[idx].tolist()}

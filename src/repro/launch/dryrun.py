@@ -185,7 +185,7 @@ def lower_solver_cell(loss_name: str = "logistic", multi_pod: bool = False,
     """Dry-run the paper's own technique at production scale: one sharded
     PCDN outer iteration over a dense (s, n) problem (kdda-class scale in
     the dense adaptation; X f32 = s*n*4 bytes sharded (data x model))."""
-    from repro.core.sharded import ShardedPCDNConfig, make_sharded_outer
+    from repro.engine.sharded import ShardedPCDNConfig, make_sharded_outer
     mesh = make_production_mesh(multi_pod=multi_pod)
     daxes = ("pod", "data") if multi_pod else ("data",)
     cfg = ShardedPCDNConfig(P_local=P_local, c=1.0, loss_name=loss_name,
@@ -204,14 +204,22 @@ def lower_solver_cell(loss_name: str = "logistic", multi_pod: bool = False,
     ws = jax.ShapeDtypeStruct((n,), jnp.float32)
     zs = jax.ShapeDtypeStruct((s,), jnp.float32)
     ks = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    # engine-contract extras: active mask, recheck flag, traced c
+    acts = jax.ShapeDtypeStruct((n,), jnp.bool_)
+    rs = jax.ShapeDtypeStruct((), jnp.bool_)
+    cs_ = jax.ShapeDtypeStruct((), jnp.float32)
     shardings = (NamedSharding(mesh, P(dspec, "model")),
                  NamedSharding(mesh, P(dspec)),
                  NamedSharding(mesh, P("model")),
                  NamedSharding(mesh, P(dspec)),
+                 NamedSharding(mesh, P()),
+                 NamedSharding(mesh, P("model")),
+                 NamedSharding(mesh, P()),
                  NamedSharding(mesh, P()))
     t0 = time.perf_counter()
-    lowered = jax.jit(lambda X, y, w, z, k: outer(X, y, w, z, k),
-                      in_shardings=shardings).lower(Xs, ys, ws, zs, ks)
+    lowered = jax.jit(
+        lambda X, y, w, z, k, a, r, c: outer(X, y, w, z, k, a, r, c),
+        in_shardings=shardings).lower(Xs, ys, ws, zs, ks, acts, rs, cs_)
     t_lower = time.perf_counter() - t0
     compiled = lowered.compile()
     t_compile = time.perf_counter() - t0 - t_lower

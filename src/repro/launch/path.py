@@ -1,42 +1,39 @@
-"""Regularization-path driver (DESIGN.md section 8):
+"""Regularization-path driver (DESIGN.md sections 8 / 9):
 
     python -m repro.launch.path --dataset real-sim --points 20 --shrink
+    python -m repro.launch.path --backend sharded --data-parallel 2 \
+        --model-parallel 4          # warm-started sweep on a device mesh
 
 Builds the geometric c-grid from the analytic c_max, runs the
-warm-started sweep (or, with --mode batch, solves every grid point
-simultaneously in one vmapped program), reports per-point
-objective / nnz / KKT / validation accuracy, and picks the best c by
-held-out accuracy. Writes a JSON report with --out (+ a .npy weight
-matrix next to it with --save-weights).
+warm-started sweep on the selected execution backend (or, with --mode
+batch, solves every grid point simultaneously in one vmapped program),
+reports per-point objective / nnz / KKT / validation accuracy, and picks
+the best c by held-out accuracy. Writes a JSON report with --out (+ a
+.npy weight matrix next to it with --save-weights).
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import numpy as np
 
-from repro.core import PCDNConfig, make_problem
 from repro.core.problem import validation_accuracy
-from repro.data import load_libsvm, paper_like
+from repro.launch import common
 from repro.path import PathConfig, PathPoint, PathResult, path_summary, \
     pick_best, problem_grid, run_path, solve_batch
 
 
 def _load(args):
-    """-> (Xtr, ytr, val_design, val_y) honoring --val-frac."""
-    if os.path.exists(args.dataset):
-        layout = "padded_csc" if args.layout == "padded_csc" else "dense"
-        X, y = load_libsvm(args.dataset, layout=layout)
+    """-> (X, y, val_design, val_y) honoring --val-frac."""
+    X, y, _Xte, _yte, spec = common.load_dataset(args)
+    if spec is None:
         if args.val_frac > 0:
             # sparse row-split would need CSR re-packing; not wired yet
             print("[path] --val-frac ignored for file datasets "
                   "(no validation split, best-c pick disabled)")
         return X, y, None, None
-    X, y, _spec = paper_like(args.dataset, scale=args.scale,
-                             seed=args.seed)
     if args.val_frac <= 0:
         return X, y, None, None
     cut = max(1, int(round((1.0 - args.val_frac) * X.shape[0])))
@@ -52,28 +49,22 @@ def main(argv=None):
                     help="paper dataset profile name or a .libsvm path")
     ap.add_argument("--loss", default="logistic",
                     choices=["logistic", "squared_hinge"])
-    ap.add_argument("--P", type=int, default=256, help="bundle size")
     ap.add_argument("--points", type=int, default=20)
     ap.add_argument("--span", type=float, default=100.0,
                     help="c_final = span * c_max (ignored with --c-final)")
     ap.add_argument("--c-final", type=float, default=None)
     ap.add_argument("--cold", action="store_true",
                     help="disable warm starting (ablation)")
-    ap.add_argument("--shrink", action="store_true",
-                    help="active-set shrinking (PCDNConfig(shrink=True))")
     ap.add_argument("--mode", default="sweep", choices=["sweep", "batch"],
                     help="sweep: sequential warm-started path; batch: "
                          "solve all grid points at once via vmap")
-    ap.add_argument("--tol", type=float, default=1e-3)
-    ap.add_argument("--max-outer", type=int, default=100)
-    ap.add_argument("--layout", default="auto",
-                    choices=["auto", "dense", "padded_csc"])
     ap.add_argument("--scale", type=float, default=None,
                     help="paper_like size scale (None = CPU-budget shape)")
     ap.add_argument("--val-frac", type=float, default=0.2,
                     help="held-out row fraction for the best-c pick "
                          "(profile datasets; 0 disables)")
-    ap.add_argument("--seed", type=int, default=0)
+    common.add_solver_args(ap)
+    common.add_backend_args(ap)
     ap.add_argument("--out", default=None, help="write path JSON here")
     ap.add_argument("--save-weights", action="store_true",
                     help="also write <out>.weights.npy")
@@ -81,16 +72,17 @@ def main(argv=None):
     if args.mode == "batch" and args.shrink:
         ap.error("--shrink requires --mode sweep (the vmapped batch "
                  "engine has no active-set masking)")
+    if args.mode == "batch" and args.backend == "sharded":
+        ap.error("--mode batch is local-only (the vmapped batch solver "
+                 "has no sharded execution backend yet)")
 
     X, y, Xval, yval = _load(args)
-    prob = make_problem(X, y, c=1.0, loss=args.loss, layout=args.layout)
-    solver = PCDNConfig(P=args.P, max_outer=args.max_outer,
-                        tol_kkt=args.tol, seed=args.seed,
-                        shrink=args.shrink)
-    print(f"[path] dataset={args.dataset} s={prob.n_samples} "
-          f"n={prob.n_features} c_max={prob.c_max():.5g} "
+    solver = common.build_pcdn_config(args)
+    backend, prob = common.make_backend(args, X, y, 1.0, args.loss)
+    print(f"[path] dataset={args.dataset} s={X.shape[0]} "
+          f"n={backend.n_features} c_max={backend.c_max():.5g} "
           f"points={args.points} mode={args.mode} shrink={args.shrink} "
-          f"warm={not args.cold}")
+          f"warm={not args.cold} backend={args.backend}")
 
     if args.mode == "batch":
         cs = problem_grid(prob, c_final=args.c_final,
@@ -123,8 +115,10 @@ def main(argv=None):
         cfg = PathConfig(solver=solver, n_points=args.points,
                          span=args.span, c_final=args.c_final,
                          warm_start=not args.cold)
-        res = run_path(prob, cfg, val_design=Xval, val_y=yval, verbose=True)
-        payload = {"mode": "sweep", **path_summary(res)}
+        res = run_path(prob, cfg, val_design=Xval, val_y=yval,
+                       verbose=True, backend=backend)
+        payload = {"mode": "sweep", "backend": args.backend,
+                   **path_summary(res)}
         weights = res.weights
         if res.best is not None:
             print(f"[path] best c={res.best.c:.5g} "

@@ -2,65 +2,24 @@
 ``python -m repro.launch.solve --dataset real-sim --loss logistic --P 512``
 
 Loads/generates an l1 classification problem, runs the selected solver
-(pcdn / cdn / scdn / tron), reports the Fig. 4-style trace, and
-checkpoints solver state every outer iteration (restart-safe).
+(pcdn / cdn / scdn / tron) on the selected execution backend
+(``--backend local|sharded`` — DESIGN.md section 9), reports the
+Fig. 4-style trace, and writes a chaining-ready report with ``--out``.
+``--warm-start`` and ``--shrink`` work on BOTH backends.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PCDNConfig, cdn_config, make_problem, scdn, solve,
-                        tron)
+from repro.core import cdn_config, make_problem, scdn, solve, tron
 from repro.core.scdn import SCDNConfig
-from repro.core.sharded import ShardedPCDNConfig, solve_sharded
-from repro.data import load_libsvm, paper_like
 from repro.data.synthetic import train_accuracy
-from repro.launch.mesh import make_host_mesh
-
-
-def sparse_weight_record(w) -> dict:
-    """JSON-compact (indices, values) form of an l1 solution — nnz-sized,
-    so a news20-scale report stays small where a dense float list would
-    be tens of MB of decimal text."""
-    w = np.asarray(w, np.float64)
-    idx = np.flatnonzero(w)
-    return {"n_features": int(w.shape[0]),
-            "w_indices": idx.tolist(),
-            "w_values": w[idx].tolist()}
-
-
-def load_warm_start(path: str, n: int, dtype) -> jnp.ndarray:
-    """Load a w0 vector from .npy, or from JSON: a dense list, or the
-    sparse {n_features, w_indices, w_values} record `--out` writes — so
-    solve runs chain."""
-    if path.endswith(".npy"):
-        w = np.asarray(np.load(path), np.float64).reshape(-1)
-    else:
-        with open(path) as fh:
-            obj = json.load(fh)
-        if isinstance(obj, dict):
-            if "w_indices" not in obj:
-                raise ValueError(
-                    f"warm start {path!r} has no weight record "
-                    f"(w_indices/w_values) — reports written by older "
-                    f"--out versions lack it; re-run the source solve "
-                    f"or pass a .npy")
-            w = np.zeros((int(obj["n_features"]),), np.float64)
-            w[np.asarray(obj["w_indices"], np.int64)] = obj["w_values"]
-        else:
-            w = np.asarray(obj, np.float64).reshape(-1)
-    if w.shape[0] != n:
-        raise ValueError(
-            f"warm start {path!r} has {w.shape[0]} features, problem "
-            f"has {n}")
-    return jnp.asarray(w, dtype)
+from repro.engine import loop as engine_loop
+from repro.launch import common
 
 
 def main(argv=None):
@@ -71,80 +30,60 @@ def main(argv=None):
                     choices=["pcdn", "cdn", "scdn", "tron"])
     ap.add_argument("--loss", default="logistic",
                     choices=["logistic", "squared_hinge"])
-    ap.add_argument("--P", type=int, default=256, help="bundle size")
     ap.add_argument("--c", type=float, default=None,
                     help="regularization (default: paper's c* per dataset)")
-    ap.add_argument("--tol", type=float, default=1e-3)
-    ap.add_argument("--max-outer", type=int, default=100)
-    ap.add_argument("--layout", default="auto",
-                    choices=["auto", "dense", "padded_csc"],
-                    help="design-matrix backend; padded_csc never "
-                         "densifies a .libsvm input (DESIGN.md section 7)")
+    common.add_solver_args(ap)
+    common.add_backend_args(ap)
     ap.add_argument("--sharded", action="store_true",
-                    help="run the distributed (shard_map) implementation")
-    ap.add_argument("--data-parallel", type=int, default=1)
-    ap.add_argument("--model-parallel", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--warm-start", default=None, metavar="CKPT",
-                    help="w0 from a .npy vector or a JSON file (a list or "
-                         "an object with a 'w' key, e.g. a previous --out "
-                         "report); pcdn/cdn only")
-    ap.add_argument("--shrink", action="store_true",
-                    help="active-set shrinking (pcdn/cdn; DESIGN.md "
-                         "section 8.2)")
+                    help="deprecated alias for --backend sharded")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args(argv)
+    if args.sharded:
+        args.backend = "sharded"
     if args.warm_start and args.solver not in ("pcdn", "cdn"):
         ap.error("--warm-start requires --solver pcdn or cdn")
     if args.shrink and args.solver not in ("pcdn", "cdn"):
         ap.error("--shrink requires --solver pcdn or cdn")
-    if (args.warm_start or args.shrink) and args.sharded:
-        ap.error("--warm-start/--shrink are not wired into --sharded yet")
+    if args.backend == "sharded" and args.solver != "pcdn":
+        ap.error("--backend sharded supports --solver pcdn only")
 
-    if os.path.exists(args.dataset):
-        # padded_csc: load sparse (csr for the sharded placer, which
-        # re-pads per shard) and never touch the dense (s, n) form.
-        if args.layout == "padded_csc":
-            file_layout = "csr" if args.sharded else "padded_csc"
-        else:
-            file_layout = "dense"
-        X, y = load_libsvm(args.dataset, layout=file_layout)
-        c = args.c or 1.0
-        Xte = yte = None
-    else:
-        Xtr, ytr, Xte, yte, spec = paper_like(args.dataset, with_test=True,
-                                              seed=args.seed)
-        X, y = Xtr, ytr
+    X, y, Xte, yte, spec = common.load_dataset(args, with_test=True)
+    if spec is not None:
         c = args.c or (spec.c_logistic if args.loss == "logistic"
                        else spec.c_svm)
+    else:
+        c = args.c or 1.0
     print(f"[solve] dataset={args.dataset} s={X.shape[0]} n={X.shape[1]} "
-          f"c={c} loss={args.loss} solver={args.solver} P={args.P}")
+          f"c={c} loss={args.loss} solver={args.solver} P={args.P} "
+          f"backend={args.backend}")
 
     t0 = time.time()
-    if args.sharded:
-        mesh = make_host_mesh(args.data_parallel, args.model_parallel)
-        cfg = ShardedPCDNConfig(
-            P_local=max(args.P // max(args.model_parallel, 1), 1), c=c,
-            loss_name=args.loss, seed=args.seed)
-        w, f, conv, k, hist = solve_sharded(X, y, mesh, cfg,
-                                            max_outer=args.max_outer,
-                                            tol_kkt=args.tol,
-                                            layout=args.layout)
-        history = hist
-        nnz = int(np.sum(np.asarray(w) != 0))
+    if args.backend == "sharded":
+        backend, _ = common.make_backend(args, X, y, c, args.loss)
+        w0 = (common.load_warm_start(args.warm_start, backend.n_features,
+                                     backend.dtype)
+              if args.warm_start else None)
+        res = engine_loop.solve(backend, c, w0=w0,
+                                max_outer=args.max_outer,
+                                tol_kkt=args.tol)
+        w = backend.host_weights(res.w)
+        f, conv = res.objective, res.converged
+        history = {k_: v.tolist()
+                   for k_, v in res.history._asdict().items()}
     else:
         prob = make_problem(X, y, c=c, loss=args.loss,
                             layout=args.layout)
-        w0 = (load_warm_start(args.warm_start, prob.n_features, prob.dtype)
+        w0 = (common.load_warm_start(args.warm_start, prob.n_features,
+                                     prob.dtype)
               if args.warm_start else None)
         if args.solver == "pcdn":
-            res = solve(prob, PCDNConfig(P=args.P, max_outer=args.max_outer,
-                                         tol_kkt=args.tol, seed=args.seed,
-                                         shrink=args.shrink), w0=w0)
+            res = solve(prob, common.build_pcdn_config(args), w0=w0)
         elif args.solver == "cdn":
             res = solve(prob, cdn_config(max_outer=args.max_outer,
                                          tol_kkt=args.tol, seed=args.seed,
-                                         shrink=args.shrink), w0=w0)
+                                         shrink=args.shrink,
+                                         use_kernels=args.use_kernels),
+                        w0=w0)
         elif args.solver == "scdn":
             res = scdn.solve(prob, SCDNConfig(max_rounds=args.max_outer,
                                               tol_kkt=args.tol,
@@ -155,8 +94,10 @@ def main(argv=None):
         w, f, conv = res.w, res.objective, res.converged
         history = {k_: v.tolist() for k_, v in
                    getattr(res, "history")._asdict().items()} \
-            if hasattr(getattr(res, "history"), "_asdict") else res.history
-        nnz = int(np.sum(np.asarray(w) != 0))
+            if hasattr(getattr(res, "history"), "_asdict") else \
+            {k_: np.asarray(v).tolist()
+             for k_, v in res.history.items()}
+    nnz = int(np.sum(np.asarray(w) != 0))
     dt = time.time() - t0
 
     print(f"[solve] F={f:.6f} converged={conv} nnz={nnz} time={dt:.1f}s")
@@ -170,7 +111,7 @@ def main(argv=None):
             # of a manual c-sweep) at nnz-sized cost
             json.dump({"objective": float(f), "converged": bool(conv),
                        "nnz": nnz, "seconds": dt,
-                       **sparse_weight_record(w),
+                       **common.sparse_weight_record(w),
                        "history": history if isinstance(history, dict)
                        else None}, fh, indent=1)
     return f

@@ -28,6 +28,7 @@ import numpy as np
 from repro.core import bundles as B
 from repro.core.pcdn import PCDNConfig, make_bundle_step
 from repro.core.problem import L1Problem
+from repro.engine import loop as engine_loop
 
 Array = jax.Array
 
@@ -121,25 +122,10 @@ def solve_batch(problem: L1Problem, cfg: PCDNConfig,
         outer = make_batch_outer(problem, cfg, batched_labels=ys is not None)
     args = (ys,) if ys is not None else ()
 
-    done = jnp.zeros((batch,), bool)
-    n_outer = jnp.zeros((batch,), jnp.int32)
-    f = jnp.full((batch,), jnp.inf, dtype)
-    kkt = jnp.full((batch,), jnp.inf, dtype)
-    nnz = jnp.zeros((batch,), jnp.int32)
-    for _ in range(cfg.max_outer):
-        w_n, z_n, keys_n, f_n, kkt_n, nnz_n = outer(w, z, keys, c_arr, *args)
-        # freeze problems that already converged: re-select their old carry
-        keep = done[:, None]
-        w = jnp.where(keep, w, w_n)
-        z = jnp.where(keep, z, z_n)
-        keys = jnp.where(keep, keys, keys_n)
-        f = jnp.where(done, f, f_n)
-        kkt = jnp.where(done, kkt, kkt_n)
-        nnz = jnp.where(done, nnz, nnz_n)
-        n_outer = jnp.where(done, n_outer, n_outer + 1)
-        done = done | (kkt <= cfg.tol_kkt)
-        if bool(jnp.all(done)):
-            break
+    # the freeze-on-convergence host loop is the engine's (DESIGN.md §9)
+    (w, z, keys), f, kkt, nnz, n_outer, done = engine_loop.run_lockstep_loop(
+        outer, (w, z, keys), (c_arr,) + args,
+        max_outer=cfg.max_outer, tol_kkt=cfg.tol_kkt, dtype=dtype)
 
     return BatchSolveResult(w=w, objective=f, kkt=kkt, nnz=nnz,
                             n_outer=n_outer, converged=done)

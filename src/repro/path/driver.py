@@ -1,11 +1,13 @@
-"""Warm-started regularization-path driver (DESIGN.md section 8).
+"""Warm-started regularization-path driver (DESIGN.md sections 8 / 9).
 
 Solves an l1 problem along a geometric c-grid built from the analytic
-c_max, chaining (w, z, active-set) state from each point into the next.
-One `pcdn.make_path_outer` program is compiled for the whole sweep — c is
-a traced argument — so a 20-point path pays one XLA compile, not twenty,
-and each warm point typically needs a handful of outer iterations where a
-cold solve needs tens.
+c_max, chaining the engine carry (w, z, active-set) from each point into
+the next. The sweep runs on ANY execution backend (`repro.engine`):
+locally one `pcdn.make_path_outer` program is compiled for the whole
+sweep — c is a traced argument — so a 20-point path pays one XLA
+compile, not twenty; on a `ShardedBackend` the same driver runs the
+warm-started sweep (including active-set shrinking) across a
+multi-device mesh with one compiled shard_map program.
 
 Per point the driver records objective / nnz / full-set KKT / iteration
 and wall-time cost plus (optionally) held-out validation accuracy, and
@@ -17,19 +19,24 @@ import dataclasses
 import time
 from typing import NamedTuple, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pcdn
 from repro.core.pcdn import PCDNConfig
 from repro.core.problem import L1Problem, validation_accuracy
+from repro.engine import loop as engine_loop
+from repro.engine.local import LocalBackend
 from repro.path import grid as grid_mod
 
 
 @dataclasses.dataclass(frozen=True)
 class PathConfig:
-    """A λ-sweep: grid geometry + the per-point PCDN solver settings."""
+    """A λ-sweep: grid geometry + the per-point PCDN solver settings.
+
+    `solver` supplies the stop parameters (max_outer / tol_kkt /
+    recheck_every / tol_rel_obj) for every backend; its execution fields
+    (P, ls_kind, use_kernels, shrink) govern the default local backend —
+    a `ShardedBackend` brings its own `ShardedPCDNConfig` for those.
+    """
 
     solver: PCDNConfig = PCDNConfig(P=256)
     n_points: int = 20
@@ -75,52 +82,59 @@ def pick_best(points: Sequence[PathPoint]) -> Optional[int]:
     return -max(scored)[2]
 
 
-def run_path(problem: L1Problem, cfg: PathConfig,
+def run_path(problem: Optional[L1Problem], cfg: PathConfig,
              val_design=None, val_y=None,
-             verbose: bool = False, outer=None) -> PathResult:
+             verbose: bool = False, outer=None,
+             backend=None) -> PathResult:
     """Sweep the c-grid; `problem.c` is a template value and is ignored.
 
+    backend: any engine execution backend; defaults to a `LocalBackend`
+    over `problem` (which may then not be None). With a backend given,
+    `problem` is unused — data, placement and the compiled iteration all
+    live in the backend, which is how one sweep runs on a sharded mesh.
     val_design / val_y: optional held-out split (anything `as_design`
     accepts) scored after each point; enables the best-c pick.
     outer: optional prebuilt `pcdn.make_path_outer(problem, cfg.solver)`
-    — benchmarks pass an already-compiled one so warm-vs-cold timings
-    compare solver work, not XLA compile time.
+    for the default local backend — benchmarks pass an already-compiled
+    one so warm-vs-cold timings compare solver work, not XLA compile
+    time.
     """
     if (val_design is None) != (val_y is None):
         raise ValueError("pass both val_design and val_y or neither")
+    if backend is None:
+        if problem is None:
+            raise ValueError("run_path needs a problem or a backend")
+        backend = LocalBackend(problem, cfg.solver, outer=outer)
     solver = cfg.solver
-    c_max = problem.c_max()
+    engine_loop.check_shrink_stop_consistency(backend, solver.tol_kkt)
+    c_max = backend.c_max()
     cs = grid_mod.c_grid(c_max, c_final=cfg.c_final, n_points=cfg.n_points,
                          span=cfg.span)
-    if outer is None:
-        outer = pcdn.make_path_outer(problem, solver)
 
-    n = problem.n_features
-    w = jnp.zeros((n,), problem.dtype)
-    z = jnp.zeros((problem.n_samples,), problem.dtype)
-    active = jnp.ones((n,), bool)
-    key = jax.random.PRNGKey(solver.seed)
+    n = backend.n_features
+    state = backend.init_state()
 
     points: list[PathPoint] = []
-    weights = np.zeros((len(cs), n), np.dtype(problem.dtype))
+    weights = np.zeros((len(cs), n), np.dtype(backend.dtype))
     t_total0 = time.perf_counter()
     for i, c in enumerate(cs):
         t0 = time.perf_counter()
         if not cfg.warm_start:
-            w = jnp.zeros((n,), problem.dtype)
-            z = jnp.zeros((problem.n_samples,), problem.dtype)
-            active = jnp.ones((n,), bool)
-            key = jax.random.PRNGKey(solver.seed)
+            state = backend.init_state()
         else:
             # refresh margins from w once per point: O(one matvec), stops
             # f32 z-drift from accumulating across the whole sweep
-            z = problem.margins(w)
-        w, z, key, active, res = pcdn.run_outer_loop(
-            problem, solver, outer, w, z, key, active, float(c))
+            state = state._replace(z=backend.margins(state.w))
+        state, res = engine_loop.run_outer_loop(
+            backend.outer, state, float(c),
+            max_outer=solver.max_outer, tol_kkt=solver.tol_kkt,
+            recheck_every=solver.recheck_every,
+            tol_rel_obj=solver.tol_rel_obj)
         seconds = time.perf_counter() - t0
-        val_acc = (validation_accuracy(val_design, val_y, w)
+        w_host = backend.host_weights(state.w)
+        val_acc = (validation_accuracy(val_design, val_y, w_host)
                    if val_design is not None else None)
-        weights[i] = np.asarray(w)
+        weights[i] = w_host
         points.append(PathPoint(
             c=float(c), objective=res.objective,
             nnz=int(np.count_nonzero(weights[i])),
