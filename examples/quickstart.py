@@ -17,7 +17,14 @@ points:
     print(res.best.c, res.best.val_accuracy)   # model selection done
 
 See examples/regularization_path.py and `python -m repro.launch.path`.
+
+The script ends with the serving loop (DESIGN.md section 10): the fitted
+sparse solution is saved as a versioned model artifact, loaded back, and
+served through the microbatched sparse-margin engine — the same
+save -> load -> predict path `python -m repro.launch.predict` drives.
 """
+import os
+import tempfile
 import time
 
 import numpy as np
@@ -25,6 +32,8 @@ import numpy as np
 from repro.core import PCDNConfig, cdn_config, make_problem, solve
 from repro.data import paper_like
 from repro.data.synthetic import train_accuracy
+from repro.serve import (MicroBatcher, ModelBank, artifact_from_solution,
+                         decide, load_model, save_model)
 
 
 def main():
@@ -53,6 +62,26 @@ def main():
     print(f"CDN   P=1: F={res_cdn.objective:.4f} time={t_cdn:.1f}s")
     print(f"speedup (even on 1 CPU core, from bundling): "
           f"{t_cdn / max(t_pcdn, 1e-9):.2f}x")
+
+    # --- serve it: save -> load -> predict (DESIGN.md section 10) -------
+    path = os.path.join(tempfile.mkdtemp(), "quickstart_model.json")
+    save_model(path, artifact_from_solution(
+        res.w, "logistic", spec.c_logistic,
+        meta={"objective": float(res.objective), "nnz": nnz}))
+    print(f"saved model artifact ({nnz} active weights) -> {path}")
+
+    bank = ModelBank.from_family(load_model(path))
+    batcher = MicroBatcher(bank, buckets=(64, 256), layout="dense")
+    preds = decide(bank, batcher.predict(Xte))
+    served_acc = float(np.mean(preds == yte))
+    stats = batcher.stats()
+    print(f"served {stats['total_rows']} requests through "
+          f"{stats['compiles']} compiled bucket shapes: "
+          f"accuracy={served_acc:.3f}")
+    # f32 reduction order differs between the numpy scorer and the XLA
+    # union-gather engine; only margins at +-eps of zero may flip
+    assert abs(served_acc - acc) <= 0.005, \
+        "serving must reproduce the fit-time scorer"
 
 
 if __name__ == "__main__":

@@ -52,6 +52,17 @@ class CSRMatrix:
         return int(np.bincount(self.indices,
                                minlength=self.shape[1]).max())
 
+    @classmethod
+    def from_dense(cls, X) -> "CSRMatrix":
+        """Row-major sparse view of a dense array (serving/test helper)."""
+        X = np.asarray(X, np.float32)
+        rows, cols = np.nonzero(X)
+        indptr = np.concatenate(
+            [[0], np.cumsum(np.bincount(rows, minlength=X.shape[0]))]
+        ).astype(np.int64)
+        return cls(data=X[rows, cols], indices=cols.astype(np.int32),
+                   indptr=indptr, shape=X.shape)
+
 
 @dataclasses.dataclass
 class PaddedCSC:
@@ -103,14 +114,47 @@ def _parse_libsvm_text(path: str):
     return y, idx, vals, np.asarray(ptr, dtype=np.int64)
 
 
+def normalize_labels(y: np.ndarray):
+    """Raw file labels -> (y_norm, classes).
+
+    ANY <= 2-label set normalizes to the solvers' +-1 contract with
+    classes == [-1, +1]: {0, 1} and {-1, +1} map as historically (sign),
+    and other two-label vocabularies ({1, 2}-style files are common in
+    the wild) map smaller -> -1, larger -> +1 — never as raw codes,
+    which would silently zero out the y == 0 class inside a +-1 loss.
+    Three or more labels are a multiclass vocabulary: classes is the
+    sorted unique label values and y_norm the float32 integer codes into
+    it (what `serve.ovr.fit_ovr` and `launch.predict` consume).
+    """
+    uniq = np.unique(y)
+    if uniq.size <= 2:
+        if set(uniq.tolist()) <= {0.0, 1.0} or \
+                set(uniq.tolist()) <= {-1.0, 1.0}:
+            y = np.where(y > 0, 1.0, -1.0)
+        else:
+            y = np.where(y == uniq.max(), 1.0, -1.0)
+        return y.astype(np.float32), np.asarray([-1.0, 1.0], np.float32)
+    codes = np.searchsorted(uniq, y)
+    return codes.astype(np.float32), uniq.astype(np.float32)
+
+
 def load_libsvm(path: str, n_features: Optional[int] = None,
                 dense: bool = True, layout: Optional[str] = None,
-                k_max: Optional[int] = None):
-    """-> (X, y) where X's type follows `layout` (y (s,) float32 +-1).
+                k_max: Optional[int] = None, return_classes: bool = False):
+    """-> (X, y) where X's type follows `layout` (y (s,) float32 +-1),
+    or (X, y, classes) with return_classes=True.
 
     layout: "dense" (default; (s, n) float32 array), "csr" (CSRMatrix),
     or "padded_csc" (PaddedCSC — never materializes the dense matrix).
     The legacy `dense=False` flag maps to layout="csr".
+
+    Labels: binary files keep the historical contract (y in {-1, +1},
+    with 0/1 files mapped onto it). Multiclass integer-labeled files are
+    supported with return_classes=True: y becomes the class CODES
+    (0..K-1, float32) and `classes` the sorted label vocabulary — the
+    exact inputs `serve.ovr.fit_ovr` takes. Loading a multiclass file
+    without return_classes raises rather than silently feeding class ids
+    into a +-1 solver.
     """
     if layout is None:
         layout = "dense" if dense else "csr"
@@ -119,16 +163,26 @@ def load_libsvm(path: str, n_features: Optional[int] = None,
 
     y, idx, vals, ptr = _parse_libsvm_text(path)
     n = n_features or (int(idx.max()) + 1 if idx.size else 0)
-    # normalize labels to {-1, +1} (a9a-style 0/1 files appear in the wild)
-    uniq = np.unique(y)
-    if set(uniq.tolist()) <= {0.0, 1.0}:
-        y = np.where(y > 0, 1.0, -1.0).astype(np.float32)
+    y, classes = normalize_labels(y)
+    if classes.shape[0] > 2 and not return_classes:
+        raise ValueError(
+            f"{path!r} has {classes.shape[0]} label values "
+            f"{classes.tolist()[:8]}...; pass return_classes=True to get "
+            f"(X, codes, classes) for one-vs-rest training")
     csr = CSRMatrix(vals, idx.astype(np.int32), ptr, (y.shape[0], n))
     if layout == "dense":
-        return csr.to_dense(), y
-    if layout == "padded_csc":
-        return csr_to_padded_csc(csr, k_max=k_max), y
-    return csr, y
+        X = csr.to_dense()
+    elif layout == "padded_csc":
+        X = csr_to_padded_csc(csr, k_max=k_max)
+    else:
+        X = csr
+    if not return_classes:
+        return X, y
+    if classes.shape[0] == 2:
+        # uniform contract: y is always CODES into classes here, so
+        # classes[codes] reconstructs the +-1 labels for binary files too
+        y = (y > 0).astype(np.float32)
+    return X, y, classes
 
 
 def save_libsvm(path: str, X: np.ndarray, y: np.ndarray) -> None:

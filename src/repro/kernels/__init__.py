@@ -5,6 +5,9 @@
                        "touch x^j twice" cache argument, TPU-native)
   pcdn_linesearch.py — batched multi-candidate Armijo objective deltas
                        (replaces Algorithm 4's sequential backtracking)
+  pcdn_margin.py     — batched serving margins over sparse-model active
+                       sets (dense and padded-CSC request layouts; the
+                       prediction engine of DESIGN.md section 10)
   flash_attention.py — online-softmax tiled attention for the model zoo
 
 Each kernel ships with `ops.py` (jit'd, padding-safe public wrapper;

@@ -19,6 +19,8 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.pcdn_direction import pcdn_direction_kernel
 from repro.kernels.pcdn_linesearch import pcdn_linesearch_kernel
+from repro.kernels.pcdn_margin import (serve_margins_csc_kernel,
+                                       serve_margins_dense_kernel)
 from repro.kernels.pcdn_sparse_direction import pcdn_sparse_direction_kernel
 
 Array = jax.Array
@@ -91,6 +93,38 @@ def pcdn_linesearch(z: Array, delta: Array, y: Array, alphas: Array,
     yp = _pad_to(y, 0, bs)
     return pcdn_linesearch_kernel(zp, dp, yp, alphas, kind=kind,
                                   block_s=bs, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def serve_margins_dense(X: Array, idx: Array, val: Array,
+                        block_b: int = 128) -> Array:
+    """Serving margins over a dense request slab (DESIGN.md section 10.3).
+
+    X (B, n), idx/val (K, A) stacked model active sets with sentinel
+    idx == n -> (B, K) float32. Pads B to a tile multiple with zero
+    rows (their margins are sliced away).
+    """
+    B, _ = X.shape
+    bb = min(block_b, max(8, B))
+    Xp = _pad_to(X, 0, bb)
+    z = serve_margins_dense_kernel(Xp, idx, val, block_b=bb,
+                                   interpret=INTERPRET)
+    return z[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("n_requests",))
+def serve_margins_csc(col_rows: Array, col_vals: Array, idx: Array,
+                      val: Array, n_requests: int) -> Array:
+    """Serving margins over a padded-CSC request batch.
+
+    col_rows/col_vals (n, k_max) feature-major request layout (sentinel
+    row id == n_requests), idx/val (K, A) -> (n_requests, K) float32.
+    No padding needed: the grid is over models and the scatter output is
+    already request-shaped.
+    """
+    return serve_margins_csc_kernel(col_rows, col_vals, idx, val,
+                                    n_requests=n_requests,
+                                    interpret=INTERPRET)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,122 @@
+"""Pallas TPU kernels: batched serving margins over sparse models.
+
+Scoring side of the repo (DESIGN.md section 10.3). A served l1 model is
+its active set — indices ``idx`` and values ``val`` of the nonzero
+weights, padded to a static width A with sentinel ``idx == n`` — and a
+request batch arrives in one of two layouts. Both kernels touch ONLY the
+active coordinates of each model, which is where the serving speedup
+comes from: work is O(A) per request instead of O(n), and solutions on
+the paper's datasets are >= 99% sparse.
+
+Dense request layout  — X (B, n) row-major request slab:
+
+    z[b, k] = sum_a val[k, a] * X[b, idx[k, a]]
+
+  Grid (K, B_tiles): each program owns one model's (idx, val) pair and a
+  (block_b, n) request tile; the gather X[:, idx] and the (BB, A) x (A,)
+  contraction run out of VMEM, writing one (block_b, 1) column of z.
+
+Padded-CSC request layout — the repo's feature-major sparse layout
+(col_rows/col_vals of the REQUEST matrix, sentinel row id == B):
+
+    z[:, k] = sum_a val[k, a] * X_csc[:, idx[k, a]]     (scatter-add)
+
+  Grid (K,): gather the model's active columns from the resident
+  (n, k_max) arrays, scale by val, scatter-add into the (B,) margin
+  vector — the exact serving-side mirror of the solver's
+  ``slab_matvec`` bundle update. Work is O(A * k_max) per model,
+  independent of both B density and n.
+
+Sentinel handling matches the direction kernels: model padding slots
+(idx == n) gather out of bounds and fill 0 (dense) or scatter out of
+bounds and drop (sparse), so padding contributes exactly nothing.
+VMEM residency caps (n * k_max and block_b * n) follow the same
+scalar-prefetch follow-up note as kernels/pcdn_sparse_direction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BLOCK_B = 128
+
+
+def _dense_kernel(x_ref, idx_ref, val_ref, z_ref):
+    idx = idx_ref[0, :]                    # (A,) int32, sentinel == n
+    val = val_ref[0, :]                    # (A,)
+    x = x_ref[...]                         # (BB, n) request tile
+    # OOB sentinel columns fill 0 -> padding contributes nothing
+    xg = jnp.take(x, idx, axis=1, mode="fill", fill_value=0.0)
+    z_ref[:, 0] = jnp.dot(xg, val, preferred_element_type=jnp.float32)
+
+
+def serve_margins_dense_kernel(X: Array, idx: Array, val: Array,
+                               block_b: int = DEFAULT_BLOCK_B,
+                               interpret: bool = True) -> Array:
+    """Raw launch. X (B, n) f32 with B % block_b == 0, idx/val (K, A).
+    Returns margins (B, K) float32."""
+    B, n = X.shape
+    K, A = idx.shape
+    assert B % block_b == 0, (B, block_b)
+    z = pl.pallas_call(
+        _dense_kernel,
+        grid=(K, B // block_b),
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda k, j: (j, 0)),   # X tile
+            pl.BlockSpec((1, A), lambda k, j: (k, 0)),         # idx
+            pl.BlockSpec((1, A), lambda k, j: (k, 0)),         # val
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda k, j: (j, k)),
+        out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
+        interpret=interpret,
+    )(X.astype(jnp.float32), idx, val.astype(jnp.float32))
+    return z
+
+
+def _csc_kernel(rows_ref, vals_ref, idx_ref, val_ref, z_ref, *,
+                n_requests: int):
+    idx = idx_ref[0, :]                    # (A,) sentinel == n
+    val = val_ref[0, :]
+    # gather the model's active request-matrix columns; sentinel models
+    # fill row id == n_requests (dropped by the scatter) and value 0
+    rows = jnp.take(rows_ref[...], idx, axis=0, mode="fill",
+                    fill_value=n_requests)                     # (A, k_max)
+    vals = jnp.take(vals_ref[...], idx, axis=0, mode="fill",
+                    fill_value=0.0)                            # (A, k_max)
+    contrib = vals * val[:, None]
+    z = jnp.zeros((n_requests,), jnp.float32)
+    z_ref[0, :] = z.at[rows].add(contrib, mode="drop")
+
+
+def serve_margins_csc_kernel(col_rows: Array, col_vals: Array, idx: Array,
+                             val: Array, n_requests: int,
+                             interpret: bool = True) -> Array:
+    """Raw launch over a padded-CSC request batch.
+
+    col_rows/col_vals (n, k_max) with sentinel row id == n_requests;
+    idx/val (K, A) with sentinel idx == n. Returns margins
+    (n_requests, K) float32.
+    """
+    n, k_max = col_rows.shape
+    K, A = idx.shape
+    kern = functools.partial(_csc_kernel, n_requests=int(n_requests))
+    z = pl.pallas_call(
+        kern,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((n, k_max), lambda k: (0, 0)),        # resident
+            pl.BlockSpec((n, k_max), lambda k: (0, 0)),        # resident
+            pl.BlockSpec((1, A), lambda k: (k, 0)),
+            pl.BlockSpec((1, A), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_requests), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, n_requests), jnp.float32),
+        interpret=interpret,
+    )(col_rows, col_vals.astype(jnp.float32), idx,
+      val.astype(jnp.float32))
+    return z.T

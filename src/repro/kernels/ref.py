@@ -47,6 +47,33 @@ def pcdn_linesearch_ref(z: Array, delta: Array, y: Array, alphas: Array,
                    axis=-1)
 
 
+def serve_margins_dense_ref(X: Array, idx: Array, val: Array) -> Array:
+    """(B, K) serving margins over a dense request slab: for each model k,
+    gather only its active columns of X (sentinel idx == n fills 0) and
+    contract with the active values — the jnp oracle of the dense-layout
+    margin kernel AND the engine's own XLA sparse-gather scorer."""
+    xg = jnp.take(X.astype(jnp.float32), idx, axis=1, mode="fill",
+                  fill_value=0.0)                       # (B, K, A)
+    return jnp.einsum("bka,ka->bk", xg, val.astype(jnp.float32))
+
+
+def serve_margins_csc_ref(col_rows: Array, col_vals: Array, idx: Array,
+                          val: Array, n_requests: int) -> Array:
+    """(B, K) serving margins over a padded-CSC request batch: gather each
+    model's active columns of the request matrix, scale, scatter-add over
+    request rows (sentinels drop) — mirror of PaddedCSCDesign.slab_matvec."""
+    def one(idx_k, val_k):
+        rows = jnp.take(col_rows, idx_k, axis=0, mode="fill",
+                        fill_value=n_requests)
+        vals = jnp.take(col_vals.astype(jnp.float32), idx_k, axis=0,
+                        mode="fill", fill_value=0.0)
+        z = jnp.zeros((n_requests,), jnp.float32)
+        return z.at[rows].add(vals * val_k[:, None].astype(jnp.float32),
+                              mode="drop")
+
+    return jax.vmap(one)(idx, val).T
+
+
 def attention_ref(q: Array, k: Array, v: Array, causal: bool = True,
                   sm_scale: float | None = None) -> Array:
     """Dense softmax attention. q: (BH, Sq, D), k/v: (BH, Skv, D)."""

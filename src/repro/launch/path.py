@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.problem import validation_accuracy
 from repro.launch import common
+from repro.serve import artifact as art
 from repro.path import PathConfig, PathPoint, PathResult, path_summary, \
     pick_best, problem_grid, run_path, solve_batch
 
@@ -68,6 +69,10 @@ def main(argv=None):
     ap.add_argument("--out", default=None, help="write path JSON here")
     ap.add_argument("--save-weights", action="store_true",
                     help="also write <out>.weights.npy")
+    ap.add_argument("--save-model", default=None, metavar="PATH",
+                    help="write the whole sweep as ONE kind='path' serve "
+                         "artifact family — every grid point becomes a "
+                         "servable model (DESIGN.md section 10.1)")
     args = ap.parse_args(argv)
     if args.mode == "batch" and args.shrink:
         ap.error("--shrink requires --mode sweep (the vmapped batch "
@@ -130,6 +135,20 @@ def main(argv=None):
         if args.save_weights:
             np.save(args.out + ".weights.npy", weights)
         print(f"[path] wrote {args.out}")
+    if args.save_model:
+        metas = [{"objective": p.objective, "kkt": p.kkt, "nnz": p.nnz,
+                  "n_outer": p.n_outer, "converged": p.converged,
+                  "val_accuracy": p.val_accuracy} for p in res.points]
+        family = art.path_family(
+            weights, res.cs, args.loss, metas=metas,
+            provenance=art.solver_provenance(
+                solver="pcdn", dataset=args.dataset, backend=args.backend,
+                mode=args.mode, P=args.P, tol_kkt=args.tol, seed=args.seed,
+                shrink=bool(args.shrink), loss=args.loss,
+                best_index=res.best_index))
+        art.save_model(args.save_model, family)
+        print(f"[path] wrote model family ({len(family)} points) to "
+              f"{args.save_model}")
     return payload
 
 

@@ -1,0 +1,170 @@
+"""Serving driver: load a model artifact, score traffic, report latency.
+
+    python -m repro.launch.solve --dataset a9a --save-model m.json
+    python -m repro.launch.predict --model m.json --dataset a9a
+
+Loads a `repro.serve` artifact (binary model, OVR head, or path family),
+stacks it into a `ModelBank`, and streams the dataset's rows through the
+microbatched prediction engine (DESIGN.md section 10.4): requests are
+padded to bucket shapes so only the first call per bucket compiles, and
+per-bucket latency / throughput are reported. `--layout padded_csc`
+serves the feature-major sparse request path; `--use-kernels` routes
+margins through the Pallas kernels (kernels/pcdn_margin.py), whose
+outputs are checked against the XLA reference scorer on the first batch.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.data import load_libsvm, paper_like
+from repro.data.libsvm import CSRMatrix
+from repro.serve.artifact import load_model
+from repro.serve.batcher import MicroBatcher, default_buckets
+from repro.serve.predict import ModelBank, decide, predict
+
+
+def _load_requests(args, n_features: int):
+    """-> (requests, y_raw, codes) — y_raw in the loader's normalized
+    vocabulary (+-1 for <= 2 labels), codes the sorted-vocabulary class
+    codes, both None when unlabeled. File datasets honor --layout;
+    profile names score the held-out test split of the generator."""
+    if os.path.exists(args.dataset):
+        csr, codes, classes = load_libsvm(args.dataset,
+                                          n_features=n_features,
+                                          layout="csr",
+                                          return_classes=True)
+        codes = np.asarray(codes, np.int64)
+        y_raw = np.asarray(classes)[codes]
+        if args.layout == "padded_csc":
+            return csr, y_raw, codes
+        return csr.to_dense(), y_raw, codes
+    _, _, Xte, yte, _ = paper_like(args.dataset, with_test=True,
+                                   seed=args.seed)
+    codes = (np.asarray(yte) > 0).astype(np.int64)
+    if args.layout == "padded_csc":
+        return CSRMatrix.from_dense(Xte), yte, codes
+    return Xte, yte, codes
+
+
+def _accuracy(bank: ModelBank, preds: np.ndarray, y_raw, codes) -> dict:
+    """Per-kind accuracy: one scalar for binary/ovr, per-point for path.
+
+    OVR banks compare on class CODES: both the loader's vocabulary and
+    `bank.classes` are sorted ascending, so codes align even when the
+    bank was trained on raw labels a binary file normalizes to +-1
+    (the {3, 7}-labeled two-class case).
+    """
+    if bank.kind == "ovr":
+        pred_codes = np.searchsorted(np.asarray(bank.classes), preds)
+        return {"accuracy": float(np.mean(pred_codes == codes))}
+    if bank.kind == "path":
+        accs = [float(np.mean(preds[:, k] == y_raw))
+                for k in range(bank.n_models)]
+        best = int(np.argmax(accs))
+        return {"per_point": accs, "best_index": best,
+                "best_accuracy": accs[best]}
+    return {"accuracy": float(np.mean(preds == y_raw))}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", required=True,
+                    help="artifact JSON from --save-model (solve or path)")
+    ap.add_argument("--dataset", required=True,
+                    help="paper dataset profile name or a .libsvm path")
+    ap.add_argument("--layout", default="dense",
+                    choices=["dense", "padded_csc"],
+                    help="request layout served to the margin engine")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="route margins through the Pallas kernels")
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated bucket sizes (default: powers "
+                         "of two up to --max-batch)")
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--limit", type=int, default=None,
+                    help="serve only the first N requests")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write predictions + bucket stats JSON here")
+    args = ap.parse_args(argv)
+
+    family = load_model(args.model)
+    bank = ModelBank.from_family(family)
+    print(f"[predict] model={args.model} kind={bank.kind} "
+          f"K={bank.n_models} n={bank.n_features} a_max={bank.a_max} "
+          f"sparsity={bank.sparsity():.4f}")
+
+    requests, y_raw, codes = _load_requests(args, bank.n_features)
+    n_req = requests.shape[0]
+    if args.limit is not None and args.limit < n_req:
+        if isinstance(requests, CSRMatrix):
+            hi = requests.indptr[args.limit]
+            requests = CSRMatrix(requests.data[:hi], requests.indices[:hi],
+                                 requests.indptr[:args.limit + 1],
+                                 (args.limit, requests.shape[1]))
+        else:
+            requests = requests[:args.limit]
+        y_raw = None if y_raw is None else y_raw[:args.limit]
+        codes = None if codes is None else codes[:args.limit]
+        n_req = args.limit
+
+    buckets = ([int(b) for b in args.buckets.split(",")] if args.buckets
+               else default_buckets(args.max_batch))
+    k_max = (requests.max_col_nnz()
+             if isinstance(requests, CSRMatrix) else None)
+    batcher = MicroBatcher(bank, buckets=buckets, layout=args.layout,
+                           use_kernels=args.use_kernels, k_max=k_max)
+
+    # kernel-vs-reference guard on the first bucket's worth of traffic
+    if args.use_kernels:
+        head = min(n_req, buckets[0])
+        if args.layout == "dense":
+            probe = np.asarray(requests[:head], np.float32)
+        else:
+            probe = CSRMatrix(
+                requests.data[:requests.indptr[head]],
+                requests.indices[:requests.indptr[head]],
+                requests.indptr[:head + 1], (head, requests.shape[1]))
+            from repro.data.libsvm import csr_to_padded_csc
+            probe = csr_to_padded_csc(probe, k_max=k_max)
+        zk = np.asarray(predict(bank, probe, use_kernels=True))
+        zr = np.asarray(predict(bank, probe, use_kernels=False))
+        err = float(np.abs(zk - zr).max()) if zk.size else 0.0
+        print(f"[predict] kernel-vs-reference max |err| = {err:.2e}")
+        if err > 1e-4 * max(1.0, float(np.abs(zr).max())):
+            raise SystemExit("Pallas margin kernel disagrees with the "
+                             "reference scorer")
+
+    margins = batcher.predict(requests)
+    stats = batcher.stats()
+    preds = decide(bank, margins)
+    payload = {"model": args.model, "kind": bank.kind,
+               "n_requests": int(n_req), "layout": args.layout,
+               "use_kernels": args.use_kernels, "stats": stats}
+    if y_raw is not None:
+        payload.update(_accuracy(bank, preds, y_raw, codes))
+        acc = payload.get("accuracy", payload.get("best_accuracy"))
+        print(f"[predict] accuracy={acc:.4f} over {n_req} requests")
+    for b in stats["buckets"]:
+        rps = b["rows_per_s"]
+        print(f"[predict] bucket={b['bucket']:>5} calls={b['calls']} "
+              f"rows={b['rows']} pad={b['pad_rows']} "
+              f"warmup={b['warmup_seconds'] * 1e3:.1f}ms "
+              + (f"steady={rps:.0f} rows/s" if rps else "steady=n/a"))
+    print(f"[predict] compiles={stats['compiles']} "
+          f"(one warmup per bucket shape)")
+
+    if args.out:
+        payload["predictions"] = np.asarray(preds).tolist()
+        with open(args.out, "w") as fh:
+            json.dump(payload, fh, indent=1, default=float)
+        print(f"[predict] wrote {args.out}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

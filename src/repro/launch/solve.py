@@ -6,11 +6,15 @@ Loads/generates an l1 classification problem, runs the selected solver
 (``--backend local|sharded`` — DESIGN.md section 9), reports the
 Fig. 4-style trace, and writes a chaining-ready report with ``--out``.
 ``--warm-start`` and ``--shrink`` work on BOTH backends.
+
+``--out`` reports are simultaneously (a) a servable model artifact
+(``repro.serve`` schema — DESIGN.md section 10.1), (b) a ``--warm-start``
+input (top-level sparse weight record), and (c) a history log.
+``--save-model`` writes just the artifact.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -20,6 +24,7 @@ from repro.core.scdn import SCDNConfig
 from repro.data.synthetic import train_accuracy
 from repro.engine import loop as engine_loop
 from repro.launch import common
+from repro.serve import artifact as art
 
 
 def main(argv=None):
@@ -36,7 +41,11 @@ def main(argv=None):
     common.add_backend_args(ap)
     ap.add_argument("--sharded", action="store_true",
                     help="deprecated alias for --backend sharded")
-    ap.add_argument("--out", default=None, help="write history JSON here")
+    ap.add_argument("--out", default=None,
+                    help="write the combined report (model artifact + "
+                         "warm-start record + history) here")
+    ap.add_argument("--save-model", default=None, metavar="PATH",
+                    help="write just the serve artifact (no history)")
     args = ap.parse_args(argv)
     if args.sharded:
         args.backend = "sharded"
@@ -104,16 +113,31 @@ def main(argv=None):
     if Xte is not None:
         acc = train_accuracy(Xte, yte, np.asarray(w))
         print(f"[solve] test accuracy: {acc:.4f}")
-    if args.out:
-        with open(args.out, "w") as fh:
-            # the sparse weight record makes the report a valid
-            # --warm-start input for the next solve (e.g. the next point
-            # of a manual c-sweep) at nnz-sized cost
-            json.dump({"objective": float(f), "converged": bool(conv),
-                       "nnz": nnz, "seconds": dt,
-                       **common.sparse_weight_record(w),
-                       "history": history if isinstance(history, dict)
-                       else None}, fh, indent=1)
+    if args.out or args.save_model:
+        meta = {"objective": float(f), "converged": bool(conv), "nnz": nnz}
+        if isinstance(history, dict) and history.get("kkt"):
+            meta["kkt"] = float(history["kkt"][-1])
+            meta["n_outer"] = len(history["kkt"])
+        family = art.ModelFamily(
+            kind="binary",
+            models=(art.artifact_from_solution(w, args.loss, c, meta=meta),),
+            provenance=art.solver_provenance(
+                solver=args.solver, dataset=args.dataset, backend=args.backend,
+                P=args.P, tol_kkt=args.tol, seed=args.seed,
+                shrink=bool(args.shrink), loss=args.loss))
+        if args.save_model:
+            art.save_model(args.save_model, family)
+        if args.out:
+            # the top-level sparse weight record keeps the report a valid
+            # --warm-start input (launch.common.load_warm_start) exactly
+            # as before the artifact schema existed; n_features comes
+            # from the artifact block itself
+            record = common.sparse_weight_record(w)
+            record.pop("n_features")
+            art.save_model(args.out, family, extra={
+                "objective": float(f), "converged": bool(conv),
+                "nnz": nnz, "seconds": dt, **record,
+                "history": history if isinstance(history, dict) else None})
     return f
 
 

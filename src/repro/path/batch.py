@@ -40,6 +40,9 @@ class BatchSolveResult(NamedTuple):
     nnz: Array          # (B,)
     n_outer: Array      # (B,) outer iterations until each problem froze
     converged: Array    # (B,) bool
+    z: Array            # (B, s) final margins X w — free from the carry;
+                        # OVR training reads its train accuracy off these
+                        # without another B-way matvec (serve/ovr.py)
 
 
 def make_batch_outer(problem: L1Problem, cfg: PCDNConfig,
@@ -128,4 +131,4 @@ def solve_batch(problem: L1Problem, cfg: PCDNConfig,
         max_outer=cfg.max_outer, tol_kkt=cfg.tol_kkt, dtype=dtype)
 
     return BatchSolveResult(w=w, objective=f, kkt=kkt, nnz=nnz,
-                            n_outer=n_outer, converged=done)
+                            n_outer=n_outer, converged=done, z=z)

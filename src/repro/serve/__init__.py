@@ -1,0 +1,35 @@
+"""Sparse-model serving subsystem (DESIGN.md section 10).
+
+Training-to-traffic path for the solvers' l1 solutions:
+
+  * `serve.artifact`  — versioned on-disk model format (active indices +
+    values, loss/c, label vocabulary, solver provenance); a path sweep or
+    an OVR head saves as one multi-model family.
+  * `serve.ovr`       — one-vs-rest multiclass training: K binary
+    subproblems fitted in ONE vmapped `path.batch.solve_batch` program
+    over a shared DesignMatrix.
+  * `serve.predict`   — batched-margin prediction engine over the stacked
+    active-coordinate `ModelBank`, with Pallas sparse-gather kernels for
+    dense and padded-CSC request layouts.
+  * `serve.batcher`   — microbatching front-end: bucket-padded request
+    batches so steady-state traffic never recompiles, with per-bucket
+    latency/throughput accounting.
+"""
+from repro.serve.artifact import (ModelArtifact, ModelFamily, SCHEMA,
+                                  artifact_from_solution, load_model,
+                                  path_family, save_model,
+                                  solver_provenance)
+from repro.serve.batcher import BucketStats, MicroBatcher, default_buckets
+from repro.serve.ovr import (OVRResult, encode_labels, fit_ovr, ovr_family,
+                             ovr_label_matrix, ovr_margins)
+from repro.serve.predict import (ModelBank, decide, margins_dense,
+                                 margins_padded_csc, predict)
+
+__all__ = [
+    "SCHEMA", "ModelArtifact", "ModelFamily", "artifact_from_solution",
+    "save_model", "load_model", "path_family", "solver_provenance",
+    "OVRResult", "encode_labels", "fit_ovr", "ovr_family",
+    "ovr_label_matrix", "ovr_margins",
+    "ModelBank", "margins_dense", "margins_padded_csc", "predict", "decide",
+    "MicroBatcher", "BucketStats", "default_buckets",
+]

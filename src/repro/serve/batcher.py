@@ -1,0 +1,220 @@
+"""Microbatching front-end: bucket-padded request batches (DESIGN.md 10.4).
+
+XLA compiles one program per input SHAPE, so serving raw variable-sized
+request batches would recompile constantly. The batcher quantizes every
+batch to a small fixed set of bucket sizes: a pending chunk of r requests
+is padded with empty rows up to the smallest bucket >= r, so after one
+warmup call per bucket, steady-state traffic NEVER recompiles — the
+recompile policy of DESIGN.md section 10.4.
+
+Two request layouts:
+
+  * "dense":      requests are (B, n) float rows; padding appends zero
+                  rows (their margins are computed and discarded).
+  * "padded_csc": requests arrive as a CSRMatrix (row-major sparse); each
+                  bucket chunk is packed into the feature-major padded-CSC
+                  layout with a FIXED column width `k_max` — shape
+                  stability demands a fixed width, so `k_max` is a
+                  construction-time cap. A chunk whose column nnz
+                  overflows it raises loudly (truncation would silently
+                  change margins); derive the cap from the full request
+                  set (`CSRMatrix.max_col_nnz`) when you have it.
+
+Per bucket the batcher accounts calls, rows, padding overhead, warmup
+(first-call, compile-inclusive) latency and steady-state latency, so
+`stats()` exposes exactly the throughput/recompile story
+benchmarks/bench_serve.py reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.design_matrix import PaddedCSCDesign, padded_csc_arrays
+from repro.serve.predict import (ModelBank, margins_dense,
+                                 margins_padded_csc)
+
+
+def default_buckets(max_batch: int) -> tuple:
+    """Powers of two up to max_batch, always including max_batch itself."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    buckets = []
+    b = 1
+    while b < max_batch:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_batch)
+    return tuple(buckets)
+
+
+@dataclasses.dataclass
+class BucketStats:
+    bucket: int
+    calls: int = 0                 # total engine invocations at this shape
+    rows: int = 0                  # real (unpadded) requests served
+    pad_rows: int = 0              # padding rows computed and discarded
+    warmup_rows: int = 0           # real rows of the first (compile) call
+    warmup_seconds: float = 0.0    # first call (includes XLA compile)
+    busy_seconds: float = 0.0      # steady-state time after warmup
+
+    @property
+    def warm_calls(self) -> int:
+        return max(self.calls - 1, 0)
+
+    @property
+    def rows_per_s(self) -> Optional[float]:
+        """Steady-state REQUEST throughput: real rows only — padding is
+        engine work, not served traffic (pad_rows reports it separately).
+        None until a bucket has warm calls."""
+        if self.warm_calls == 0 or self.busy_seconds <= 0:
+            return None
+        return (self.rows - self.warmup_rows) / self.busy_seconds
+
+    def as_dict(self) -> dict:
+        return {"bucket": self.bucket, "calls": self.calls,
+                "rows": self.rows, "pad_rows": self.pad_rows,
+                "warmup_rows": self.warmup_rows,
+                "warmup_seconds": self.warmup_seconds,
+                "busy_seconds": self.busy_seconds,
+                "rows_per_s": self.rows_per_s}
+
+
+class MicroBatcher:
+    """Pads request batches to bucket shapes and scores them on a bank."""
+
+    def __init__(self, bank: ModelBank, buckets: Sequence[int] = None,
+                 layout: str = "dense", use_kernels: bool = False,
+                 k_max: Optional[int] = None, max_batch: int = 64):
+        if layout not in ("dense", "padded_csc"):
+            raise ValueError(f"unknown request layout {layout!r}")
+        if layout == "padded_csc" and k_max is None:
+            raise ValueError(
+                "layout='padded_csc' needs a fixed column width k_max "
+                "(e.g. CSRMatrix.max_col_nnz() of the request stream) — "
+                "shape stability is the whole point of bucketing")
+        self.bank = bank
+        self.layout = layout
+        self.use_kernels = use_kernels
+        self.k_max = None if k_max is None else int(k_max)
+        self.buckets = tuple(sorted(set(
+            int(b) for b in (buckets or default_buckets(max_batch)))))
+        if self.buckets[0] < 1:
+            raise ValueError(f"buckets must be >= 1: {self.buckets}")
+        self._stats = {b: BucketStats(bucket=b) for b in self.buckets}
+
+    # -- bucket geometry -----------------------------------------------------
+    @property
+    def max_bucket(self) -> int:
+        return self.buckets[-1]
+
+    def bucket_for(self, r: int) -> int:
+        """Smallest bucket >= r (r must not exceed the largest bucket)."""
+        for b in self.buckets:
+            if b >= r:
+                return b
+        raise ValueError(f"chunk of {r} exceeds max bucket "
+                         f"{self.max_bucket}")
+
+    # -- request plumbing ----------------------------------------------------
+    def predict(self, requests) -> np.ndarray:
+        """Score any number of requests -> (B, K) margins.
+
+        dense layout: (B, n) array rows. padded_csc layout: a CSRMatrix
+        (row-major sparse requests). Oversized inputs are split into
+        max-bucket chunks; the ragged tail is padded up to its bucket.
+        """
+        n_req = (requests.shape[0] if hasattr(requests, "shape")
+                 else len(requests))
+        out = []
+        start = 0
+        while start < n_req:
+            stop = min(start + self.max_bucket, n_req)
+            out.append(self._run_chunk(requests, start, stop))
+            start = stop
+        return np.concatenate(out, axis=0) if out else \
+            np.zeros((0, self.bank.n_models), np.float32)
+
+    def _run_chunk(self, requests, start: int, stop: int) -> np.ndarray:
+        r = stop - start
+        bucket = self.bucket_for(r)
+        if self.layout == "dense":
+            X = np.asarray(requests[start:stop], np.float32)
+            if X.shape[1] != self.bank.n_features:
+                raise ValueError(f"requests have {X.shape[1]} features, "
+                                 f"bank has {self.bank.n_features}")
+            if bucket > r:
+                X = np.concatenate(
+                    [X, np.zeros((bucket - r, X.shape[1]), np.float32)])
+            run = lambda: margins_dense(self.bank, X,
+                                        use_kernels=self.use_kernels)
+        else:
+            packed = self._pack_csc(requests, start, stop, bucket)
+            run = lambda: margins_padded_csc(self.bank, packed,
+                                             use_kernels=self.use_kernels)
+        st = self._stats[bucket]
+        t0 = time.perf_counter()
+        z = run()
+        z = np.asarray(z)              # blocks until the device is done
+        dt = time.perf_counter() - t0
+        if st.calls == 0:
+            st.warmup_seconds += dt
+            st.warmup_rows = r
+        else:
+            st.busy_seconds += dt
+        st.calls += 1
+        st.rows += r
+        st.pad_rows += bucket - r
+        return z[:r]
+
+    def _pack_csc(self, csr, start: int, stop: int,
+                  bucket: int) -> PaddedCSCDesign:
+        """Rows [start, stop) of a CSRMatrix -> (bucket, n) padded-CSC.
+
+        Padding rows simply have no nonzeros; the fixed (n, k_max) column
+        width keeps the packed shape identical for every chunk of the
+        same bucket. Overflowing k_max raises (see module docstring).
+        """
+        for a in ("data", "indices", "indptr", "shape"):
+            if not hasattr(csr, a):
+                raise TypeError(
+                    f"padded_csc layout serves CSR request streams; got "
+                    f"{type(csr).__name__} (dense rows go to "
+                    f"layout='dense')")
+        n = csr.shape[1]
+        if n != self.bank.n_features:
+            raise ValueError(f"requests have {n} features, bank has "
+                             f"{self.bank.n_features}")
+        lo, hi = csr.indptr[start], csr.indptr[stop]
+        indptr = np.asarray(csr.indptr[start:stop + 1], np.int64) - lo
+        indptr = np.concatenate(
+            [indptr, np.full((bucket - (stop - start),), indptr[-1],
+                             np.int64)])
+        col_rows, col_vals, s, _ = padded_csc_arrays(
+            csr.data[lo:hi], csr.indices[lo:hi], indptr, (bucket, n),
+            k_max=self.k_max)
+        return PaddedCSCDesign(col_rows=jnp.asarray(col_rows),
+                               col_vals=jnp.asarray(col_vals),
+                               _n_samples=s)
+
+    # -- accounting ----------------------------------------------------------
+    def stats(self) -> dict:
+        per_bucket = [self._stats[b].as_dict() for b in self.buckets
+                      if self._stats[b].calls]
+        rows = sum(s["rows"] for s in per_bucket)
+        busy = sum(s["busy_seconds"] for s in per_bucket)
+        # real served requests only — padding is engine overhead, not
+        # traffic (each bucket's pad_rows reports it)
+        warm_rows = sum(s["rows"] - s["warmup_rows"] for s in per_bucket)
+        return {
+            "layout": self.layout,
+            "use_kernels": self.use_kernels,
+            "buckets": per_bucket,
+            "total_rows": rows,
+            "compiles": len(per_bucket),   # one warmup per bucket shape
+            "steady_rows_per_s": (warm_rows / busy) if busy > 0 else None,
+        }

@@ -1,0 +1,215 @@
+"""Batched-margin prediction engine over sparse models (DESIGN.md 10.3).
+
+Serving state is a `ModelBank`: the K models of an artifact family (an
+OVR head, a path family, or one binary model) stacked into TWO sparse
+layouts built once at load time —
+
+  per-model padded (the Pallas kernel layout):
+    idx (K, A_max) int32   active feature ids, sentinel == n_features
+    val (K, A_max) float32 matching weights, 0 at padding
+
+  union-compressed (the XLA scorer layout):
+    union_idx (U,)   int32 sorted union of every model's active ids
+    union_val (K, U) f32   each model's weights restricted to the union
+
+A_max = max_k nnz(w_k) and U = |union|, so bank memory is K * A_max +
+K * U, not K * n. Scoring touches ONLY active coordinates of the request
+batch, in either request layout:
+
+  * dense  (B, n) slab        -> ONE shared gather X[:, union_idx]
+    followed by a (B, U) x (U, K) matmul — the gather (the expensive op
+    on every backend) is amortized across all K models instead of paid
+    per model;
+  * padded-CSC request matrix -> gather the union's request columns
+    once, scatter-add per model over request rows (slab_matvec's
+    serving twin).
+
+Each scorer has an XLA implementation (jitted; also the fast path on
+CPU) and a Pallas kernel route (`use_kernels=True`, the per-model
+gather of kernels/pcdn_margin.py); tests pin all four to the dense
+matmul ground truth. `decide` turns margins into predictions: argmax
+over classes for an OVR bank, sign for binary/path banks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.design_matrix import PaddedCSCDesign
+from repro.kernels import ops
+from repro.serve.artifact import ModelFamily
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBank:
+    """Stacked sparse layouts of K models sharing n_features."""
+
+    idx: Array                     # (K, A_max) int32, sentinel == n_features
+    val: Array                     # (K, A_max) float32, 0 at padding
+    union_idx: Array               # (U,) int32 union of active ids
+    union_val: Array               # (K, U) float32 weights on the union
+    bias: Array                    # (K,) float32
+    n_features: int
+    kind: str = "binary"
+    loss_name: str = "logistic"
+    classes: Optional[np.ndarray] = None   # (K,) vocab for kind="ovr"
+
+    @property
+    def n_models(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def a_max(self) -> int:
+        return int(self.idx.shape[1])
+
+    @property
+    def nnz(self) -> np.ndarray:
+        return np.asarray(jnp.sum(self.idx < self.n_features, axis=1))
+
+    def sparsity(self) -> float:
+        """Mean fraction of zero weights across the bank's models."""
+        return 1.0 - float(self.nnz.mean()) / max(self.n_features, 1)
+
+    @classmethod
+    def _build(cls, sparse_rows, bias, n: int, kind: str, loss_name: str,
+               classes) -> "ModelBank":
+        """sparse_rows: [(indices, values)] per model -> both layouts."""
+        K = len(sparse_rows)
+        a_max = max(1, max(ii.shape[0] for ii, _ in sparse_rows))
+        idx = np.full((K, a_max), n, np.int32)
+        val = np.zeros((K, a_max), np.float32)
+        for k, (ii, vv) in enumerate(sparse_rows):
+            idx[k, :ii.shape[0]] = ii
+            val[k, :ii.shape[0]] = vv
+        union = np.unique(np.concatenate(
+            [ii for ii, _ in sparse_rows] or [np.zeros(0, np.int64)]))
+        if union.size == 0:
+            union = np.zeros((1,), np.int64)    # all-zero bank (c_max point)
+        uval = np.zeros((K, union.shape[0]), np.float32)
+        for k, (ii, vv) in enumerate(sparse_rows):
+            uval[k, np.searchsorted(union, ii)] = vv
+        b = np.zeros((K,), np.float32) if bias is None \
+            else np.asarray(bias, np.float32).reshape(K)
+        return cls(idx=jnp.asarray(idx), val=jnp.asarray(val),
+                   union_idx=jnp.asarray(union.astype(np.int32)),
+                   union_val=jnp.asarray(uval), bias=jnp.asarray(b),
+                   n_features=n, kind=kind, loss_name=loss_name,
+                   classes=classes)
+
+    @classmethod
+    def from_family(cls, family: ModelFamily) -> "ModelBank":
+        rows = [(m.w_indices, m.w_values.astype(np.float32))
+                for m in family.models]
+        bias = np.asarray([m.bias for m in family.models], np.float32)
+        return cls._build(rows, bias, family.n_features, family.kind,
+                          family.loss_name, family.classes)
+
+    @classmethod
+    def from_dense(cls, W, bias=None, kind: str = "binary",
+                   loss_name: str = "logistic",
+                   classes: Optional[np.ndarray] = None) -> "ModelBank":
+        """Stack (K, n) dense solutions (e.g. OVRResult.weights)."""
+        W = np.asarray(W, np.float32)
+        if W.ndim == 1:
+            W = W[None, :]
+        rows = [(np.flatnonzero(W[k]), W[k, np.flatnonzero(W[k])])
+                for k in range(W.shape[0])]
+        return cls._build(rows, bias, W.shape[1], kind, loss_name, classes)
+
+
+@jax.jit
+def _dense_xla(X, union_idx, union_val, bias):
+    """One shared active-union gather, then a small (B, U) x (U, K)
+    contraction — the gather cost is paid once for all K models."""
+    Xu = jnp.take(X, union_idx, axis=1)
+    return Xu @ union_val.T + bias[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n_requests",))
+def _csc_xla(col_rows, col_vals, union_idx, union_val, bias, n_requests):
+    """Shared gather of the union's request-matrix columns; per-model
+    scaled scatter-add over request rows (slab_matvec's serving twin)."""
+    rows = jnp.take(col_rows, union_idx, axis=0)          # (U, k_max)
+    vals = jnp.take(col_vals.astype(jnp.float32), union_idx, axis=0)
+
+    def one(vk):                                          # (U,) weights
+        z = jnp.zeros((n_requests,), jnp.float32)
+        return z.at[rows].add(vals * vk[:, None], mode="drop")
+
+    return jax.vmap(one)(union_val).T + bias[None, :]
+
+
+def margins_dense(bank: ModelBank, X, use_kernels: bool = False) -> Array:
+    """(B, K) margins for a dense (B, n) request slab."""
+    if not isinstance(X, jax.Array):
+        X = jnp.asarray(np.asarray(X), jnp.float32)
+    elif X.dtype != jnp.float32:
+        X = X.astype(jnp.float32)
+    if X.ndim != 2 or X.shape[1] != bank.n_features:
+        raise ValueError(f"requests must be (B, {bank.n_features}), got "
+                         f"{X.shape}")
+    if use_kernels:
+        return ops.serve_margins_dense(X, bank.idx, bank.val) + \
+            bank.bias[None, :]
+    return _dense_xla(X, bank.union_idx, bank.union_val, bank.bias)
+
+
+def margins_padded_csc(bank: ModelBank, requests,
+                       use_kernels: bool = False) -> Array:
+    """(B, K) margins for a padded-CSC request batch.
+
+    `requests`: a PaddedCSCDesign or a numpy-side data.libsvm.PaddedCSC —
+    the feature-major layout of the REQUEST matrix (B rows, n features).
+    """
+    if isinstance(requests, PaddedCSCDesign):
+        rows, vals = requests.col_rows, requests.col_vals
+        B, n = requests.shape
+    elif all(hasattr(requests, a) for a in ("col_rows", "col_vals",
+                                            "shape")):
+        rows = jnp.asarray(requests.col_rows)
+        vals = jnp.asarray(requests.col_vals, jnp.float32)
+        B, n = requests.shape
+    else:
+        raise TypeError(f"not a padded-CSC request batch: "
+                        f"{type(requests).__name__}")
+    if n != bank.n_features:
+        raise ValueError(f"requests have {n} features, bank has "
+                         f"{bank.n_features}")
+    if use_kernels:
+        return ops.serve_margins_csc(rows, vals, bank.idx, bank.val,
+                                     n_requests=int(B)) + bank.bias[None, :]
+    return _csc_xla(rows, vals, bank.union_idx, bank.union_val, bank.bias,
+                    n_requests=int(B))
+
+
+def predict(bank: ModelBank, requests, use_kernels: bool = False) -> Array:
+    """Margins for either request layout (dispatch on the request type)."""
+    if hasattr(requests, "col_rows"):
+        return margins_padded_csc(bank, requests, use_kernels=use_kernels)
+    return margins_dense(bank, requests, use_kernels=use_kernels)
+
+
+def decide(bank: ModelBank, margins) -> np.ndarray:
+    """Margins -> predictions.
+
+    ovr bank: (B,) class labels by argmax margin; binary bank: (B,) +-1
+    by sign (0 counts +1, matching validation_accuracy); path bank:
+    (B, K) +-1 per grid point.
+    """
+    m = np.asarray(margins)
+    if bank.kind == "ovr":
+        if bank.classes is None:
+            raise ValueError("ovr bank without a class vocabulary")
+        return np.asarray(bank.classes)[np.argmax(m, axis=1)]
+    pred = np.sign(m)
+    pred[pred == 0] = 1.0
+    if bank.kind == "binary":
+        return pred[:, 0]
+    return pred

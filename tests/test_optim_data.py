@@ -101,6 +101,57 @@ def test_libsvm_roundtrip(tmp_path):
     np.testing.assert_array_equal(y, y2)
 
 
+def test_libsvm_roundtrip_all_layouts(tmp_path):
+    """writer -> reader round trip must agree across dense / csr /
+    padded_csc — same values, same labels, no densification surprises."""
+    X, y, _ = make_classification(40, 12, sparsity=0.6, seed=3)
+    p = str(tmp_path / "layouts.libsvm")
+    save_libsvm(p, X, y)
+    Xd, yd = load_libsvm(p, n_features=12, layout="dense")
+    Xc, yc = load_libsvm(p, n_features=12, layout="csr")
+    Xp, yp = load_libsvm(p, n_features=12, layout="padded_csc")
+    np.testing.assert_allclose(Xd, X, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(Xc.to_dense(), Xd, rtol=0, atol=0)
+    from repro.core.design_matrix import PaddedCSCDesign
+    dense_from_padded = np.asarray(PaddedCSCDesign(
+        col_rows=jnp.asarray(Xp.col_rows), col_vals=jnp.asarray(Xp.col_vals),
+        _n_samples=Xp.shape[0]).to_dense())
+    np.testing.assert_allclose(dense_from_padded, Xd, rtol=0, atol=0)
+    for yy in (yd, yc, yp):
+        np.testing.assert_array_equal(yy, y)
+
+
+def test_libsvm_multiclass_labels(tmp_path):
+    """Integer multiclass files load as (X, codes, classes); loading them
+    without return_classes raises instead of feeding ids to +-1 solvers."""
+    rng = np.random.default_rng(0)
+    X = (rng.random((25, 6)) < 0.5) * rng.standard_normal((25, 6))
+    labels = rng.choice([2.0, 5.0, 9.0], size=25)
+    labels[:3] = [2.0, 5.0, 9.0]          # every class present
+    p = str(tmp_path / "mc.libsvm")
+    save_libsvm(p, X.astype(np.float32), labels)
+    with pytest.raises(ValueError, match="return_classes"):
+        load_libsvm(p, n_features=6)
+    X2, codes, classes = load_libsvm(p, n_features=6, return_classes=True)
+    np.testing.assert_array_equal(classes, [2.0, 5.0, 9.0])
+    np.testing.assert_array_equal(classes[codes.astype(np.int64)], labels)
+    np.testing.assert_allclose(X2, X, rtol=1e-4, atol=1e-5)
+    # binary files keep the historical contract under both signatures
+    save_libsvm(p, X.astype(np.float32), np.where(labels > 4, 1.0, -1.0))
+    _, yb = load_libsvm(p, n_features=6)
+    assert set(np.unique(yb)) <= {-1.0, 1.0}
+    _, cb, clb = load_libsvm(p, n_features=6, return_classes=True)
+    np.testing.assert_array_equal(clb, [-1.0, 1.0])
+    np.testing.assert_array_equal(clb[cb.astype(np.int64)], yb)
+    # NON-canonical two-label files ({1,2}-style) must also land on +-1,
+    # never on raw codes (a y == 0 class would silently drop out of the
+    # +-1 losses)
+    two = np.where(labels > 4, 2.0, 1.0)
+    save_libsvm(p, X.astype(np.float32), two)
+    _, y12 = load_libsvm(p, n_features=6)
+    np.testing.assert_array_equal(y12, np.where(two == 2.0, 1.0, -1.0))
+
+
 def test_duplicate_samples_preserves_correlation():
     X, y, _ = make_classification(50, 8, sparsity=0.2, seed=1)
     X2, y2 = duplicate_samples(X, y, 2.5)
