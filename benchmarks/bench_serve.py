@@ -170,11 +170,11 @@ def check_kernels(K, n, B, sparsity, seed=0):
         zr - margins_dense(bank, Xj, use_kernels=True))))
     err_csc = float(jnp.max(jnp.abs(
         zr - margins_padded_csc(bank, design, use_kernels=True))))
-    out = {"interpret": bool(ops.INTERPRET),
+    out = {"interpret": bool(ops.interpret_mode()),
            "dense_kernel_max_err": err_dense,
            "csc_kernel_max_err": err_csc}
     print(f"[kernels] dense err {err_dense:.1e}, csc err {err_csc:.1e} "
-          f"(interpret={ops.INTERPRET})", flush=True)
+          f"(interpret={ops.interpret_mode()})", flush=True)
     return out
 
 

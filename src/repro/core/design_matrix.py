@@ -56,7 +56,37 @@ class SparseSlab(NamedTuple):
     valid: Array       # (P,) bool
 
 
+class SlabSupport(NamedTuple):
+    """The row support of one bundle slab (DESIGN.md section 11).
+
+    support: (r_max,) int32 — sorted UNIQUE row ids touched by the
+    bundle, sentinel-padded (== n_samples) exactly like k_max padding;
+    r_max = P * k_max is the static worst case. pos: (P, k_max) int32 —
+    for every slab entry, its index into `support` (always in-bounds;
+    padding entries point at a sentinel slot and carry value 0, so they
+    contribute nothing to any support-scoped reduction).
+    """
+    support: Array     # (r_max,) int32, sorted, sentinel == n_samples
+    pos: Array         # (P, k_max) int32, index into support
+
+
 Slab = Union[DenseSlab, SparseSlab]
+
+
+def padded_row_support(rows: Array, sentinel: int) -> SlabSupport:
+    """Static-shape unique row set of a padded (P, k_max) row-id array.
+
+    Sort the flattened ids, blank duplicates to the sentinel, re-sort so
+    the unique ids stay sorted with all sentinels trailing, then recover
+    every entry's slot with one searchsorted. O(P*k_max log(P*k_max)) —
+    never touches the sample axis.
+    """
+    flat = rows.reshape(-1)
+    srt = jnp.sort(flat)
+    dup = jnp.concatenate([jnp.zeros((1,), bool), srt[1:] == srt[:-1]])
+    support = jnp.sort(jnp.where(dup, sentinel, srt))
+    pos = jnp.searchsorted(support, rows).astype(jnp.int32)
+    return SlabSupport(support=support.astype(jnp.int32), pos=pos)
 
 
 class DesignMatrix:
@@ -235,6 +265,46 @@ class PaddedCSCDesign(DesignMatrix):
         """delta_z via scatter-add at col_rows (duplicate rows accumulate)."""
         z = jnp.zeros((self._n_samples,), self.col_vals.dtype)
         return z.at[slab.rows].add(slab.vals * d[:, None], mode="drop")
+
+    # -- support-scoped slab protocol (DESIGN.md section 11) -----------------
+    def slab_row_support(self, slab: SparseSlab) -> SlabSupport:
+        """Static (r_max = P * k_max) unique row set of one bundle slab.
+
+        Everything a bundle step does to the per-sample intermediates is
+        zero outside these rows (delta_i = 0 there), so the line search
+        and the z update can be restricted to them — O(P * k_max) work
+        instead of O(s) per bundle.
+        """
+        return padded_row_support(slab.rows, self._n_samples)
+
+    def slab_grad_hess_support(self, slab: SparseSlab, pos: Array,
+                               u_R: Array, v_R: Array):
+        """`slab_grad_hess` with u/v given only at the support rows.
+
+        u_R/v_R: (r_max,) factors evaluated at support order; pos maps
+        each slab entry into them (always in-bounds, padding vals are 0),
+        so the gather never touches the (s,)-sized vectors. Bitwise equal
+        to the full-scope reduction: same addends in the same k-order.
+        """
+        ug = jnp.take(u_R, pos)
+        vg = jnp.take(v_R, pos)
+        g = jnp.sum(ug * slab.vals, axis=1)
+        h = jnp.sum(vg * jnp.square(slab.vals), axis=1)
+        return g, h
+
+    def slab_matvec_support(self, slab: SparseSlab, pos: Array,
+                            d: Array) -> Array:
+        """Support-compressed margin delta: (r_max,) values delta_R with
+        delta_R[r] = (X_B d_B)[support[r]]. Sentinel support slots stay
+        exactly 0 (padding entries carry value 0)."""
+        r_max = pos.shape[0] * pos.shape[1]
+        out = jnp.zeros((r_max,), slab.vals.dtype)
+        return out.at[pos].add(slab.vals * d[:, None])
+
+    def scatter_support(self, z: Array, support: Array, upd: Array) -> Array:
+        """z[support] += upd with sentinel slots dropped (the support-
+        scoped form of the z += alpha * X_B d_B margin maintenance)."""
+        return z.at[support].add(upd, mode="drop")
 
     def slab_coordinate_deltas(self, slab: SparseSlab, d: Array) -> Array:
         """(P, s) per-coordinate margin deltas (vmapped single scatters)."""

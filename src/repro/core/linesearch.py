@@ -14,7 +14,7 @@ evaluated through the per-sample intermediates (section 3.1):
 so no pass over X is needed inside the backtracking loop — the exact
 analogue of Algorithm 4's e^{w.x} / d.x bookkeeping, in stable z-space.
 
-Two variants (DESIGN.md section 3.2):
+Four variants (DESIGN.md sections 3.2 / 11):
 
   * `armijo_backtracking`   — faithful sequential loop (lax.while_loop),
     identical to Algorithm 4. This is the paper-faithful baseline.
@@ -22,8 +22,17 @@ Two variants (DESIGN.md section 3.2):
     beta^0..beta^{Q-1} in one vectorized pass and selects the first
     satisfying candidate. Same accepted alpha (tested), no sequential
     dependence; this is what kernels/pcdn_linesearch implements.
+  * `armijo_chunked`        — the full-scope DEFAULT: while_loop over
+    Q-chunks (8 candidates per pass) with early exit, so the (Q, s)
+    candidate grid is never materialized and the common one-chunk accept
+    costs 8/Q of the batched pass.
+  * `armijo_support`        — support-scoped: the same batched grid but
+    over the bundle's gathered row support (z_R, delta_R, y_R), each of
+    length r_max = P * k_max — O(P * k_max * Q) instead of O(s * Q),
+    exact because phi(z_i + alpha * 0) - phi(z_i) == 0 bitwise wherever
+    the bundle touches no nonzero of row i.
 
-Both return (alpha, n_steps, accepted) where n_steps is q+1 (paper's q^t
+All return (alpha, n_steps, accepted) where n_steps is q+1 (paper's q^t
 counts evaluations) and accepted=False means even the smallest candidate
 failed (alpha=0 returned; cannot happen in theory per Thm 2, but guards
 float underflow).
@@ -78,8 +87,12 @@ def objective_delta_batched(loss: Loss, c: float, z: Array, delta: Array,
     """Vectorized over a (Q,) vector of candidate alphas -> (Q,) deltas.
 
     Loss part broadcasts (Q, 1) x (s,) -> (Q, s); reduced over samples.
-    For very large s callers should chunk (the sharded solver reduces the
-    (Q,) partials with a single psum — DESIGN.md section 3.4).
+    The (Q, s) grid is materialized here, so large-s callers go through
+    `armijo_chunked` (the full-scope solver default — it feeds this
+    function chunk-sized alpha vectors) or `armijo_support` (which
+    passes r_max-sized gathered arrays); the sharded solver reduces the
+    (Q,) partials with a single psum instead (DESIGN.md sections 3.2 /
+    3.4 / 11).
     """
     zq = z[None, :] + alphas[:, None] * delta[None, :]
     lo = c * jnp.sum(loss.value(zq, y[None, :]) - loss.value(z, y)[None, :],
@@ -145,5 +158,70 @@ def armijo_batched(loss: Loss, c: float, z: Array, delta: Array, y: Array,
     """TPU-native variant: one vectorized pass over all candidates."""
     alphas = candidate_alphas(params, z.dtype)
     f_deltas = objective_delta_batched(loss, c, z, delta, y, w_B, d_B,
+                                       alphas, l2)
+    return select_first_satisfying(f_deltas, alphas, Delta, params.sigma)
+
+
+def armijo_chunked(loss: Loss, c: float, z: Array, delta: Array, y: Array,
+                   w_B: Array, d_B: Array, Delta: Array,
+                   params: ArmijoParams, l2: float = 0.0,
+                   chunk: int = 8) -> LineSearchResult:
+    """Chunked early-exit variant: the full-scope solver default.
+
+    Evaluates candidates in while_loop chunks of `chunk`, stopping at the
+    first chunk containing a satisfying alpha. Peak work per pass is
+    (chunk, s) instead of (Q, s), and since alpha = 1 or beta is accepted
+    on almost every bundle (paper Table 4: mean q^t ~ 1), the typical
+    cost is one chunk. Accepted alpha and n_steps match armijo_batched
+    exactly; when NO candidate satisfies (never per Thm 2) n_steps is Q
+    — every candidate really was evaluated — where the batched variant
+    reports 1.
+    """
+    alphas = candidate_alphas(params, z.dtype)
+    Q = alphas.shape[0]
+    chunk = min(chunk, Q)
+    n_chunks = -(-Q // chunk)
+    # pad with the smallest candidate: a duplicate can never be the FIRST
+    # satisfying alpha (its original either passed earlier or also fails)
+    alphas_p = jnp.concatenate(
+        [alphas, jnp.full((n_chunks * chunk - Q,), alphas[-1], alphas.dtype)])
+    sigma = params.sigma
+
+    def cond(st):
+        i, _alpha, _n, done = st
+        return jnp.logical_and(~done, i < n_chunks)
+
+    def body(st):
+        i, _alpha, _n, _done = st
+        a = jax.lax.dynamic_slice(alphas_p, (i * chunk,), (chunk,))
+        f_deltas = objective_delta_batched(loss, c, z, delta, y, w_B, d_B,
+                                           a, l2)
+        ok = f_deltas <= sigma * a * Delta
+        any_ok = jnp.any(ok)
+        first = jnp.argmax(ok)
+        alpha = jnp.where(any_ok, a[first], 0.0)
+        n = jnp.where(any_ok, i * chunk + first + 1, Q).astype(jnp.int32)
+        return i + 1, alpha, n, any_ok
+
+    _, alpha, n_steps, accepted = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.asarray(0.0, z.dtype),
+                     jnp.int32(Q), jnp.asarray(False)))
+    return LineSearchResult(alpha=alpha, n_steps=n_steps, accepted=accepted)
+
+
+def armijo_support(loss: Loss, c: float, z_R: Array, delta_R: Array,
+                   y_R: Array, w_B: Array, d_B: Array, Delta: Array,
+                   params: ArmijoParams, l2: float = 0.0) -> LineSearchResult:
+    """Support-scoped batched search (DESIGN.md section 11).
+
+    z_R / delta_R / y_R are the per-sample intermediates gathered at the
+    bundle's (r_max,) row support (`PaddedCSCDesign.slab_row_support`),
+    sentinel slots filled with z = delta = 0 — their candidate loss
+    delta is phi(0 + alpha * 0) - phi(0) == 0 bitwise, so the (Q, r_max)
+    grid computes exactly the full-scope objective delta while touching
+    r_max <= P * k_max rows instead of all s samples.
+    """
+    alphas = candidate_alphas(params, z_R.dtype)
+    f_deltas = objective_delta_batched(loss, c, z_R, delta_R, y_R, w_B, d_B,
                                        alphas, l2)
     return select_first_satisfying(f_deltas, alphas, Delta, params.sigma)

@@ -16,16 +16,18 @@ is the paper's "maintain e^{w.x_i}" technique (section 3.1) in z-space.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bundles as B
-from repro.core.design_matrix import SparseSlab
+from repro.core.design_matrix import PaddedCSCDesign, SparseSlab
 from repro.core.direction import delta_decrement, newton_direction
 from repro.core.linesearch import (ArmijoParams, armijo_backtracking,
-                                   armijo_batched)
+                                   armijo_batched, armijo_chunked,
+                                   armijo_support, candidate_alphas)
 from repro.core.problem import L1Problem
 # history/result containers + the host convergence loop live in the
 # engine layer now (DESIGN.md section 9); re-exported here for compat.
@@ -42,6 +44,16 @@ class PCDNConfig:
     tol_kkt: float = 1e-3        # stop when KKT violation <= tol_kkt
     tol_rel_obj: float = 0.0     # optional: stop when F <= (1+tol)(F*) given f_star
     ls_kind: str = "batched"     # "batched" (TPU-native) | "backtracking" (faithful)
+    # -- line-search / margin-maintenance scope (DESIGN.md section 11) -------
+    # "support": restrict the candidate grid, the u/v factors and the z
+    #   update to the bundle's row support — O(P * k_max * Q) per bundle
+    #   instead of O(s * Q). padded_csc layout only.
+    # "full": evaluate over all s samples (the pre-support behavior; the
+    #   batched variant now runs chunked with early exit).
+    # "auto": support when the layout is padded_csc AND the margin rule
+    #   AUTO_SUPPORT_MARGIN * P * k_max <= s holds (resolve_ls_scope).
+    ls_scope: str = "auto"
+    ls_chunk: int = 8            # candidate chunk of the full-scope search
     seed: int = 0
     use_kernels: bool = False    # route bundle math through Pallas kernels
     # -- active-set shrinking (CDN heritage; DESIGN.md section 8.2) ----------
@@ -58,20 +70,116 @@ def cdn_config(**kw) -> PCDNConfig:
 
 def _line_search_fn(cfg: PCDNConfig) -> Callable:
     if cfg.ls_kind == "batched":
-        return armijo_batched
+        # full-scope batched search runs chunked with early exit so the
+        # (Q, s) candidate grid is never materialized (DESIGN.md §3.2)
+        return functools.partial(armijo_chunked, chunk=cfg.ls_chunk)
     if cfg.ls_kind == "backtracking":
         return armijo_backtracking
     raise ValueError(f"unknown ls_kind {cfg.ls_kind!r}")
 
 
+AUTO_SUPPORT_MARGIN = 4  # auto picks support iff MARGIN * P * k_max <= s
+
+
+def resolve_ls_scope(cfg: PCDNConfig, problem: L1Problem) -> str:
+    """Static scope decision (DESIGN.md section 11.3).
+
+    "support" needs the padded_csc layout (a dense slab has no
+    compressed row support); "auto" additionally requires the static
+    support bound to beat the sample count with margin —
+    AUTO_SUPPORT_MARGIN * P * k_max <= s. The margin covers the
+    support build (a sort over P * k_max ids) and the gathers: the
+    BENCH_bundle.json grid measures the crossover near r_max ~ s/4
+    (support wins 4.5x at r_max/s ~ 0.06, loses ~0.7x at ~0.6).
+    Force `ls_scope="support"` to override near the boundary.
+    """
+    if cfg.ls_scope == "full":
+        return "full"
+    sparse = isinstance(problem.design, PaddedCSCDesign)
+    if cfg.ls_scope == "support":
+        if not sparse:
+            raise ValueError(
+                "ls_scope='support' requires the padded_csc design "
+                "backend; the dense layout has no compressed row support "
+                "(use layout='padded_csc' or ls_scope='full'/'auto').")
+        return "support"
+    if cfg.ls_scope != "auto":
+        raise ValueError(f"unknown ls_scope {cfg.ls_scope!r}")
+    if sparse and (AUTO_SUPPORT_MARGIN * cfg.P * problem.design.k_max
+                   <= problem.n_samples):
+        return "support"
+    return "full"
+
+
 def make_bundle_step(problem: L1Problem, cfg: PCDNConfig):
-    """One inner iteration t (steps 6-11 of Algorithm 3) as a scan body."""
+    """One inner iteration t (steps 6-11 of Algorithm 3) as a scan body.
+
+    Two shapes of the same update (identical accepted alpha; pinned by
+    tests/test_bundle_support.py):
+
+    * full scope — direction over the slab, dense (s,) margin delta,
+      line search over all samples, dense z update.
+    * support scope (DESIGN.md section 11) — every per-sample pass
+      (u/v factors, candidate grid, z update) restricted to the
+      bundle's <= P * k_max row support, so one bundle step is
+      O(P * k_max * Q) and solve time stops scaling with s. With
+      use_kernels the whole support step is ONE fused Pallas launch
+      (kernels/pcdn_bundle).
+    """
     loss = problem.loss
-    ls = _line_search_fn(cfg)
     gamma = cfg.armijo.gamma
+    scope = resolve_ls_scope(cfg, problem)
 
     if cfg.use_kernels:
         from repro.kernels import ops as kops
+
+    if scope == "support":
+        design = problem.design
+        fuse = cfg.use_kernels and cfg.ls_kind == "batched"
+
+        def step(carry, idx):
+            w, z = carry
+            slab = design.gather_slab(idx)
+            w_B, _ = B.gather_vec(w, idx)
+            support, pos = design.slab_row_support(slab)
+            z_R = jnp.take(z, support, mode="fill", fill_value=0)
+            y_R = jnp.take(problem.y, support, mode="fill", fill_value=1)
+            if fuse:
+                upd_w, upd_z, alpha, n_steps = kops.pcdn_bundle(
+                    slab.vals, pos, z_R, y_R, w_B,
+                    candidate_alphas(cfg.armijo, z.dtype), problem.c,
+                    kind=problem.loss_name, l2=problem.elastic_net_l2,
+                    sigma=cfg.armijo.sigma, gamma=gamma)
+                w = B.scatter_add(w, idx, upd_w)
+                z = design.scatter_support(z, support, upd_z)
+                return (w, z), (n_steps, alpha)
+            if cfg.use_kernels:
+                # backtracking search: no fused step, but the direction
+                # still routes through the sparse kernel — pos is the
+                # support-local row array, u/v handed over in support
+                # order (same composition as the sharded backend)
+                u_R = problem.grad_factor_at(z_R, y_R)
+                v_R = problem.hess_factor_at(z_R, y_R)
+                d, g, h = kops.pcdn_sparse_direction(
+                    pos, slab.vals, u_R, v_R, w_B,
+                    l2=problem.elastic_net_l2)
+            else:
+                g, h = problem.bundle_grad_hess_support(slab, pos, z_R,
+                                                        y_R, w_B)
+                d = newton_direction(g, h, w_B)
+            Delta = delta_decrement(g, h, w_B, d, gamma)
+            delta_R = design.slab_matvec_support(slab, pos, d)
+            ls_fn = (armijo_support if cfg.ls_kind == "batched"
+                     else armijo_backtracking)
+            res = ls_fn(loss, problem.c, z_R, delta_R, y_R, w_B, d, Delta,
+                        cfg.armijo, l2=problem.elastic_net_l2)
+            w = B.scatter_add(w, idx, res.alpha * d)
+            z = design.scatter_support(z, support, res.alpha * delta_R)
+            return (w, z), (res.n_steps, res.alpha)
+
+        return step
+
+    ls = _line_search_fn(cfg)
 
     def step(carry, idx):
         w, z = carry

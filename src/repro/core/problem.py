@@ -116,6 +116,34 @@ class L1Problem:
         """v_i = c * d2phi/dz2_i ; hess_jj L = sum_i v_i x_ij^2."""
         return self.c * self.loss.d2z(z, self.y)
 
+    # -- support-gathered factors (DESIGN.md section 11) ---------------------
+    def grad_factor_at(self, z_R: Array, y_R: Array) -> Array:
+        """`grad_factor` over explicitly gathered (z_R, y_R) — evaluated
+        at a bundle's <= P * k_max support rows instead of all s samples.
+        Bitwise equal to grad_factor(z)[support] (elementwise map)."""
+        return self.c * self.loss.dz(z_R, y_R)
+
+    def hess_factor_at(self, z_R: Array, y_R: Array) -> Array:
+        """`hess_factor` over explicitly gathered (z_R, y_R)."""
+        return self.c * self.loss.d2z(z_R, y_R)
+
+    def bundle_grad_hess_support(self, slab: SparseSlab, pos: Array,
+                                 z_R: Array, y_R: Array, w_B: Array):
+        """`bundle_grad_hess` computed entirely on a bundle's row support.
+
+        z_R/y_R: (r_max,) margins and labels gathered at the slab's
+        `slab_row_support`; pos maps slab entries into them. Same l2 fold
+        and Hessian floor as the full-scope path, with u/v evaluated at
+        <= P * k_max rows instead of s.
+        """
+        u_R = self.grad_factor_at(z_R, y_R)
+        v_R = self.hess_factor_at(z_R, y_R)
+        g, h = self.design.slab_grad_hess_support(slab, pos, u_R, v_R)
+        if self.elastic_net_l2:
+            g = g + self.elastic_net_l2 * w_B
+            h = h + self.elastic_net_l2
+        return g, jnp.maximum(h, HESSIAN_FLOOR)
+
     def bundle_grad_hess(self, z: Array, slab: Union[Slab, Array],
                          w_B: Array):
         """Gradient and Hessian diagonal restricted to a bundle slab.

@@ -63,6 +63,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.utils.compat import shard_map as _shard_map
 
 from repro.core import bundles as B
+from repro.core.design_matrix import padded_row_support
 from repro.core.direction import delta_decrement, newton_direction
 from repro.core.linesearch import (ArmijoParams, candidate_alphas,
                                    select_first_satisfying)
@@ -94,6 +95,16 @@ class ShardedPCDNConfig:
     # route the shard-local bundle reductions through the fused Pallas
     # direction kernels (partials only; see module docstring)
     use_kernels: bool = False
+    # -- line-search / margin scope (DESIGN.md section 11.4) -----------------
+    # "support" restricts the phase-3 loss evaluation, the u/v factors
+    # and the z_l update to the bundle's shard-local row support. Valid
+    # when the model axis has size 1 (data-sharded meshes): the local
+    # slab support then IS the true support of the post-psum margin
+    # delta. With model parallelism the bundle's rows span shards whose
+    # supports are unknown locally, so full scope is kept (the
+    # allgather-merge of per-shard supports is the documented follow-up).
+    # The (Q,) phase-3 psum payload is IDENTICAL in both scopes.
+    ls_scope: str = "auto"
     # -- active-set shrinking (same semantics as PCDNConfig; DESIGN.md 8.2)
     shrink: bool = False
     shrink_tol: float = 0.01
@@ -138,6 +149,21 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
         raise ValueError(f"unknown layout {layout!r}")
     if cfg.use_kernels:
         from repro.kernels import ops as kops
+
+    # static support-scope eligibility (DESIGN.md section 11.4)
+    n_model_static = int(mesh.shape[model_axis])
+    support_ok = (layout == "padded_csc" and cfg.ls_kind == "batched"
+                  and n_model_static == 1)
+    if cfg.ls_scope == "support" and not support_ok:
+        raise ValueError(
+            "ls_scope='support' on the sharded backend requires "
+            "layout='padded_csc', ls_kind='batched' and a model axis of "
+            f"size 1 (got layout={layout!r}, ls_kind={cfg.ls_kind!r}, "
+            f"model={n_model_static}); with model parallelism a bundle's "
+            "row support spans shards and is unknown locally — use "
+            "ls_scope='auto' to fall back to full scope.")
+    elif cfg.ls_scope not in ("support", "auto", "full"):
+        raise ValueError(f"unknown ls_scope {cfg.ls_scope!r}")
 
     def outer_local(*args):
         """Runs inside shard_map: every array is this shard's block."""
@@ -204,6 +230,77 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
                 return X_l.T @ u
             ug = jnp.take(u, rows_l, mode="fill", fill_value=0)
             return jnp.sum(ug * vals_l, axis=1)
+
+        # static per-shard scope decision ("auto" needs the local slab
+        # bound P_local * k_max to beat the local sample count with the
+        # same margin as the local backend — pcdn.AUTO_SUPPORT_MARGIN)
+        if layout == "padded_csc":
+            from repro.core.pcdn import AUTO_SUPPORT_MARGIN
+            use_support = support_ok and (
+                cfg.ls_scope == "support" or
+                (cfg.ls_scope == "auto" and
+                 AUTO_SUPPORT_MARGIN * P_local * rows_l.shape[1] <= s_l))
+        else:
+            use_support = False
+
+        def bundle_step_support(carry, idx):
+            """Support-restricted bundle step (DESIGN.md section 11.4):
+            same phase-1 [g;h] psum and phase-3 (Q,) psum as the full-
+            scope step; the per-sample passes between them touch only
+            the bundle's shard-local row support."""
+            w_l, z_l = carry
+            rB, vB = gather_local(idx)
+            w_B, _ = B.gather_vec(w_l, idx)
+            support, pos = padded_row_support(rB, s_l)
+            z_R = jnp.take(z_l, support, mode="fill", fill_value=0)
+            y_R = jnp.take(y_l, support, mode="fill", fill_value=1)
+            u_R = c * loss.dz(z_R, y_R)
+            v_R = c * loss.d2z(z_R, y_R)
+            if cfg.use_kernels:
+                # pos is the support-local row id array: same kernel,
+                # u/v handed over in support order (all gathers in
+                # bounds; padding entries carry value 0)
+                _, g_part, h_part = kops.pcdn_sparse_direction(
+                    pos, vB, u_R, v_R, w_B, l2=0.0)
+            else:
+                g_part = jnp.sum(jnp.take(u_R, pos) * vB, axis=1)
+                h_part = jnp.sum(jnp.take(v_R, pos) * jnp.square(vB),
+                                 axis=1)
+            # -- phase 1: grad/hess psum over sample shards (unchanged)
+            if cfg.fuse_collectives:
+                gh = jax.lax.psum(jnp.concatenate([g_part, h_part]),
+                                  data_axes)
+                g, h = gh[:P_local], gh[P_local:]
+            else:
+                g = jax.lax.psum(g_part, data_axes)
+                h = jax.lax.psum(h_part, data_axes)
+            if cfg.elastic_net_l2:
+                g = g + cfg.elastic_net_l2 * w_B
+                h = h + cfg.elastic_net_l2
+            h = jnp.maximum(h, HESSIAN_FLOOR)
+            d = newton_direction(g, h, w_B)
+            # -- phase 2: model axis has size 1, so the margin-delta
+            # psum is the identity and only the scalar Delta crosses it;
+            # the (s_l,) dense delta is never built.
+            Delta = jax.lax.psum(delta_decrement(g, h, w_B, d, gamma),
+                                 model_axis)
+            delta_R = jnp.zeros_like(z_R).at[pos].add(vB * d[:, None])
+            # -- phase 3: the SAME (Q,) all-axes psum, loss part now
+            # reduced over the support rows only
+            zq = z_R[None, :] + alphas[:, None] * delta_R[None, :]
+            loss_part = c * jnp.sum(
+                loss.value(zq, y_R[None, :]) -
+                loss.value(z_R, y_R)[None, :], axis=-1)
+            l1_part = (jnp.sum(
+                jnp.abs(w_B[None, :] + alphas[:, None] * d[None, :]),
+                axis=-1) - jnp.sum(jnp.abs(w_B)))
+            fused = loss_part / jnp.asarray(n_model, z_l.dtype) + \
+                l1_part / jnp.asarray(n_data, z_l.dtype)
+            f_deltas = jax.lax.psum(fused, cfg.all_axes)
+            res = select_first_satisfying(f_deltas, alphas, Delta, sigma)
+            w_l = B.scatter_add(w_l, idx, res.alpha * d)
+            z_l = z_l.at[support].add(res.alpha * delta_R, mode="drop")
+            return (w_l, z_l), res.n_steps
 
         def bundle_step(carry, idx):
             w_l, z_l = carry
@@ -284,6 +381,8 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
             z_l = z_l + alpha * delta_z
             return (w_l, z_l), n_steps
 
+        step_fn = bundle_step_support if use_support else bundle_step
+
         if cfg.shrink:
             # Per-shard active partition; the trip count is the pmax over
             # model shards, so every shard executes the same collective
@@ -294,7 +393,7 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
 
             def body(t, carry):
                 wz, q_sum = carry
-                wz, n_steps = bundle_step(wz, idxs[t])
+                wz, n_steps = step_fn(wz, idxs[t])
                 return wz, q_sum + n_steps.astype(jnp.float32)
 
             (w_l, z_l), q_sum = jax.lax.fori_loop(
@@ -302,7 +401,7 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
             mean_q = q_sum / jnp.maximum(trip, 1).astype(jnp.float32)
         else:
             idxs = B.partition(sub, n_local, P_local)      # (b, P_local)
-            (w_l, z_l), steps = jax.lax.scan(bundle_step, (w_l, z_l), idxs)
+            (w_l, z_l), steps = jax.lax.scan(step_fn, (w_l, z_l), idxs)
             mean_q = jnp.mean(steps.astype(jnp.float32))
 
         # diagnostics: objective + FULL-set KKT violation (replicated)

@@ -3,6 +3,10 @@
   pcdn_direction.py  — fused bundle grad/Hessian/Eq.-5 direction: reads the
                        (s, P) slab from HBM once (the paper's section 3.1
                        "touch x^j twice" cache argument, TPU-native)
+  pcdn_bundle.py     — fused support-restricted bundle STEP: factors,
+                       direction, Delta, support margin delta, all-Q
+                       Armijo and the accepted update in ONE launch —
+                       O(P * k_max * Q), s-independent (DESIGN.md §11)
   pcdn_linesearch.py — batched multi-candidate Armijo objective deltas
                        (replaces Algorithm 4's sequential backtracking)
   pcdn_margin.py     — batched serving margins over sparse-model active
@@ -11,9 +15,9 @@
   flash_attention.py — online-softmax tiled attention for the model zoo
 
 Each kernel ships with `ops.py` (jit'd, padding-safe public wrapper;
-custom_vjp for attention) and `ref.py` (pure-jnp oracle). On this CPU
-container kernels run in interpret mode (tests sweep shapes/dtypes vs the
-oracles); on real TPU set ``repro.kernels.ops.INTERPRET = False``.
+custom_vjp for attention) and `ref.py` (pure-jnp oracle). Interpreter
+mode is resolved from the ``REPRO_KERNELS_INTERPRET`` env var (default
+"auto": compiled on TPU, interpreter elsewhere — see `ops.interpret_mode`).
 """
 from repro.kernels import ops, ref
 

@@ -4,19 +4,26 @@ Handle padding to tile-aligned shapes, dtype plumbing, GQA head broadcast,
 and the custom_vjp for attention (forward = Pallas, backward = recompute
 with the jnp oracle — standard flash recomputation strategy).
 
-`interpret` defaults to True: this container is CPU-only, so kernels always
-run in interpreter mode here; on real TPU pass interpret=False (e.g. via
-repro.kernels.ops.INTERPRET = False at startup).
+Interpreter mode is controlled by the ``REPRO_KERNELS_INTERPRET`` env
+var: "auto" (default) runs compiled kernels on TPU and the interpreter
+everywhere else, "1"/"true" forces the interpreter, "0"/"false" forces
+compiled kernels. Resolution is lazy (first kernel trace), so importing
+this module never initializes a jax backend and no import-order-
+sensitive monkeypatching is needed on real TPU. Assigning the legacy
+``repro.kernels.ops.INTERPRET = False`` still works: a non-None value
+short-circuits the env lookup.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.pcdn_bundle import pcdn_bundle_kernel
 from repro.kernels.pcdn_direction import pcdn_direction_kernel
 from repro.kernels.pcdn_linesearch import pcdn_linesearch_kernel
 from repro.kernels.pcdn_margin import (serve_margins_csc_kernel,
@@ -25,7 +32,22 @@ from repro.kernels.pcdn_sparse_direction import pcdn_sparse_direction_kernel
 
 Array = jax.Array
 
-INTERPRET = True  # flip to False on real TPU
+# tri-state: None = resolve from REPRO_KERNELS_INTERPRET / backend on
+# first use; assigning True/False here (legacy API) overrides both.
+INTERPRET = None
+
+
+def interpret_mode() -> bool:
+    """Resolve (and cache) whether kernels run in interpreter mode."""
+    global INTERPRET
+    if INTERPRET is None:
+        env = os.environ.get("REPRO_KERNELS_INTERPRET", "auto")
+        env = env.strip().lower()
+        if env in ("auto", ""):
+            INTERPRET = jax.default_backend() != "tpu"
+        else:
+            INTERPRET = env not in ("0", "false", "no", "off")
+    return INTERPRET
 
 
 def _pad_to(x: Array, axis: int, multiple: int, value=0.0) -> Array:
@@ -55,7 +77,7 @@ def pcdn_direction(XB: Array, u: Array, v: Array, w_B: Array,
     vp = _pad_to(v, 0, bs)
     wp = _pad_to(w_B, 0, block_p)
     d, g, h = pcdn_direction_kernel(XBp, up, vp, wp, l2=l2, block_s=bs,
-                                    block_p=block_p, interpret=INTERPRET)
+                                    block_p=block_p, interpret=interpret_mode())
     return d[:P], g[:P], h[:P]
 
 
@@ -77,7 +99,7 @@ def pcdn_sparse_direction(rows: Array, vals: Array, u: Array, v: Array,
     valsp = _pad_to(vals, 0, bp)
     wp = _pad_to(w_B, 0, bp)
     d, g, h = pcdn_sparse_direction_kernel(rowsp, valsp, u, v, wp, l2=l2,
-                                           block_p=bp, interpret=INTERPRET)
+                                           block_p=bp, interpret=interpret_mode())
     return d[:P], g[:P], h[:P]
 
 
@@ -92,7 +114,44 @@ def pcdn_linesearch(z: Array, delta: Array, y: Array, alphas: Array,
     dp = _pad_to(delta, 0, bs)
     yp = _pad_to(y, 0, bs)
     return pcdn_linesearch_kernel(zp, dp, yp, alphas, kind=kind,
-                                  block_s=bs, interpret=INTERPRET)
+                                  block_s=bs, interpret=interpret_mode())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "l2", "sigma", "gamma"))
+def pcdn_bundle(vals: Array, pos: Array, z_R: Array, y_R: Array,
+                w_B: Array, alphas: Array, c,
+                kind: str = "logistic", l2: float = 0.0,
+                sigma: float = 0.01, gamma: float = 0.0):
+    """Fused support-restricted bundle step (DESIGN.md section 11).
+
+    vals/pos (P, k_max) from `PaddedCSCDesign.gather_slab` +
+    `slab_row_support`; z_R/y_R (r_max,) margins and labels gathered at
+    the support rows (sentinel slots: z = 0, y = 1); alphas (Q,); `c`
+    may be a traced scalar (path sweeps). Returns (upd_w (P,),
+    upd_z (r_max,), alpha, n_steps) with upd_* pre-scaled by the
+    accepted alpha — the caller only scatters them at the bundle
+    indices / support rows.
+
+    Pads P and r_max to lane multiples: padded features carry vals = 0
+    and w = 0 (d = 0, no l1/Delta contribution), padded support slots
+    z = 0 / y = 1 / delta = 0 (loss delta exactly 0). pos is NOT
+    re-targeted — padded slab entries keep pointing at real slots with
+    value 0. Single-program launch: VMEM caps the (Q, r_max) candidate
+    grid at ~2M f32, i.e. P * k_max * Q within ~8 MB — solver bundle
+    sizes, not a constraint at the repro's scales.
+    """
+    P, _ = vals.shape
+    R = z_R.shape[0]
+    valsp = _pad_to(vals, 0, 8)
+    posp = _pad_to(pos, 0, 8, value=0)
+    wp = _pad_to(w_B, 0, 8)
+    zp = _pad_to(z_R, 0, 128)
+    yp = _pad_to(y_R, 0, 128, value=1.0)
+    upd_w, upd_z, alpha, q = pcdn_bundle_kernel(
+        valsp, posp, zp, yp, wp, alphas, c, kind=kind, l2=l2,
+        sigma=sigma, gamma=gamma, interpret=interpret_mode())
+    return upd_w[:P], upd_z[:R], alpha, q
 
 
 @functools.partial(jax.jit, static_argnames=("block_b",))
@@ -108,7 +167,7 @@ def serve_margins_dense(X: Array, idx: Array, val: Array,
     bb = min(block_b, max(8, B))
     Xp = _pad_to(X, 0, bb)
     z = serve_margins_dense_kernel(Xp, idx, val, block_b=bb,
-                                   interpret=INTERPRET)
+                                   interpret=interpret_mode())
     return z[:B]
 
 
@@ -124,7 +183,7 @@ def serve_margins_csc(col_rows: Array, col_vals: Array, idx: Array,
     """
     return serve_margins_csc_kernel(col_rows, col_vals, idx, val,
                                     n_requests=n_requests,
-                                    interpret=INTERPRET)
+                                    interpret=interpret_mode())
 
 
 # ---------------------------------------------------------------------------
@@ -156,7 +215,7 @@ def _flash_fwd_impl(q, k, v, causal, sm_scale):
         return ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
     out = flash_attention_kernel(qp, kp, vp, causal=causal,
                                  sm_scale=sm_scale, block_q=bq, block_k=bk,
-                                 interpret=INTERPRET)
+                                 interpret=interpret_mode())
     return out[:, :Sq]
 
 

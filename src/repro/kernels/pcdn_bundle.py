@@ -1,0 +1,181 @@
+"""Pallas TPU kernel: the fused support-restricted PCDN bundle step.
+
+One launch per bundle replaces the previous 3-kernel + 2 dense-vector
+round-trip sequence (sparse direction kernel -> dense (s,) slab_matvec ->
+line-search kernel -> dense (s,) z update). Working entirely on the
+bundle's row support (DESIGN.md section 11), the kernel:
+
+    1. forms u_R = c * dphi(z_R), v_R = c * d2phi(z_R) at the (r_max,)
+       support rows (NOT the (s,) margin vector),
+    2. reduces g_j = sum_k u_R[pos_jk] * vals_jk and the Hessian
+       diagonal over the (P, k_max) slab,
+    3. applies the Eq. 5 soft-threshold epilogue -> d and the Eq. 7
+       Armijo decrement Delta,
+    4. scatter-adds the support-compressed margin delta
+       delta_R = (X_B d_B)[support],
+    5. evaluates ALL Q Armijo candidates on the (Q, r_max) support grid
+       (loss + l1 + optional elastic-net parts) and selects the first
+       satisfying alpha,
+    6. emits the scatter update VALUES alpha * d (for w at the bundle
+       indices) and alpha * delta_R (for z at the support rows).
+
+Every intermediate between the slab read and the update emission stays
+in VMEM — no HBM round trip of a (P,)-direction or an (s,) margin delta
+between launches, which is the section 3.1 "minimize data transfer and
+synchronization" argument applied to the whole bundle step. Total work
+is O(P * k_max * Q): independent of the sample count s.
+
+The support gather itself (z_R = z[support], y_R = y[support]) runs as
+an XLA gather feeding the launch: a VMEM-resident (s,) operand with a
+constant index map — how the unfused kernels hold u/v — would
+reintroduce the O(s) per-launch transfer this kernel exists to
+eliminate. Moving that gather in-kernel needs scalar-prefetched DMA
+from HBM (PrefetchScalarGridSpec) and is the documented follow-up.
+
+Scalars: `c` is TRACED (SMEM input) so one compiled step serves a whole
+regularization-path sweep; l2/sigma/gamma/loss kind are static. Single
+program (grid=(1,)): P, k_max, Q and r_max = P * k_max are all VMEM
+scale at solver bundle sizes (the (Q, r_max) grid is the largest
+intermediate; the `ops.pcdn_bundle` wrapper documents the cap).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+HESSIAN_FLOOR = 1e-12
+
+
+def _phi(kind: str, z, y):
+    if kind == "logistic":
+        m = -y * z
+        return jnp.maximum(m, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(m)))
+    if kind == "squared_hinge":
+        return jnp.square(jnp.maximum(0.0, 1.0 - y * z))
+    if kind == "squared":
+        return 0.5 * jnp.square(z - y)
+    raise ValueError(kind)
+
+
+def _dphi(kind: str, z, y):
+    if kind == "logistic":
+        return (jax.nn.sigmoid(y * z) - 1.0) * y
+    if kind == "squared_hinge":
+        return -2.0 * y * jnp.maximum(0.0, 1.0 - y * z)
+    if kind == "squared":
+        return z - y
+    raise ValueError(kind)
+
+
+def _d2phi(kind: str, z, y):
+    if kind == "logistic":
+        t = jax.nn.sigmoid(y * z)
+        return t * (1.0 - t)
+    if kind == "squared_hinge":
+        return 2.0 * (y * z < 1.0).astype(z.dtype)
+    if kind == "squared":
+        return jnp.ones_like(z)
+    raise ValueError(kind)
+
+
+def _kernel(vals_ref, pos_ref, zR_ref, yR_ref, w_ref, alphas_ref, c_ref,
+            updw_ref, updz_ref, alpha_ref, q_ref, *,
+            kind: str, l2: float, sigma: float, gamma: float):
+    z = zR_ref[0, :]                       # (R,) support margins
+    yv = yR_ref[0, :]                      # (R,)
+    c = c_ref[0, 0]
+    # step 1: per-sample factors at the support rows only
+    u = c * _dphi(kind, z, yv)
+    v = c * _d2phi(kind, z, yv)
+    # step 2: slab reductions through the support positions (in-bounds by
+    # construction; padding entries carry value 0)
+    pos = pos_ref[...]                     # (P, K) int32
+    vals = vals_ref[...]                   # (P, K) f32
+    ug = jnp.take(u, pos)
+    vg = jnp.take(v, pos)
+    w = w_ref[0, :]                        # (P,)
+    g = jnp.sum(ug * vals, axis=1) + l2 * w
+    h = jnp.maximum(jnp.sum(vg * vals * vals, axis=1) + l2, HESSIAN_FLOOR)
+    # step 3: Eq. 5 soft-threshold Newton direction + Eq. 7 decrement
+    d = jnp.where(g + 1.0 <= h * w, -(g + 1.0) / h,
+                  jnp.where(g - 1.0 >= h * w, -(g - 1.0) / h, -w))
+    Delta = (jnp.sum(g * d) + gamma * jnp.sum(h * d * d) +
+             jnp.sum(jnp.abs(w + d)) - jnp.sum(jnp.abs(w)))
+    # step 4: support-compressed margin delta (scatter within VMEM)
+    delta = jnp.zeros_like(z).at[pos].add(vals * d[:, None])
+    # step 5: all Q Armijo candidates on the (Q, R) support grid
+    alphas = alphas_ref[...]               # (Q, 1)
+    zq = z[None, :] + alphas * delta[None, :]
+    lo = c * jnp.sum(_phi(kind, zq, yv[None, :]) -
+                     _phi(kind, z, yv)[None, :], axis=1)      # (Q,)
+    wq = w[None, :] + alphas * d[None, :]
+    f_deltas = lo + jnp.sum(jnp.abs(wq), axis=1) - jnp.sum(jnp.abs(w))
+    if l2:
+        f_deltas = f_deltas + 0.5 * l2 * (jnp.sum(jnp.square(wq), axis=1) -
+                                          jnp.sum(jnp.square(w)))
+    a = alphas[:, 0]
+    ok = f_deltas <= sigma * a * Delta
+    first = jnp.argmax(ok)                 # first True (lowest index)
+    alpha = jnp.where(jnp.any(ok), a[first], 0.0)
+    # step 6: emit the scatter update values + the accepted step
+    updw_ref[0, :] = alpha * d
+    updz_ref[0, :] = alpha * delta
+    alpha_ref[0, 0] = alpha
+    q_ref[0, 0] = (first + 1).astype(jnp.int32)
+
+
+def pcdn_bundle_kernel(
+    vals: Array, pos: Array, z_R: Array, y_R: Array, w_B: Array,
+    alphas: Array, c: Array,
+    kind: str = "logistic", l2: float = 0.0, sigma: float = 0.01,
+    gamma: float = 0.0, interpret: bool = True,
+):
+    """Raw launch. vals/pos (P, K); z_R/y_R (R,); w_B (P,); alphas (Q,);
+    c a scalar (may be traced). Returns (upd_w (P,), upd_z (R,),
+    alpha scalar, n_steps int32 scalar) — upd_* already scaled by the
+    accepted alpha."""
+    P, K = vals.shape
+    R = z_R.shape[0]
+    Q = alphas.shape[0]
+    kernel = functools.partial(_kernel, kind=kind, l2=float(l2),
+                               sigma=float(sigma), gamma=float(gamma))
+    out_shape = [
+        jax.ShapeDtypeStruct((1, P), jnp.float32),
+        jax.ShapeDtypeStruct((1, R), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+    ]
+    upd_w, upd_z, alpha, q = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((P, K), lambda i: (0, 0)),        # vals
+            pl.BlockSpec((P, K), lambda i: (0, 0)),        # pos
+            pl.BlockSpec((1, R), lambda i: (0, 0)),        # z_R
+            pl.BlockSpec((1, R), lambda i: (0, 0)),        # y_R
+            pl.BlockSpec((1, P), lambda i: (0, 0)),        # w_B
+            pl.BlockSpec((Q, 1), lambda i: (0, 0)),        # alphas
+            pl.BlockSpec(memory_space=pltpu.SMEM),         # c (traced)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, P), lambda i: (0, 0)),
+            pl.BlockSpec((1, R), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(vals.astype(jnp.float32), pos,
+      z_R.reshape(1, R).astype(jnp.float32),
+      y_R.reshape(1, R).astype(jnp.float32),
+      w_B.reshape(1, P).astype(jnp.float32),
+      alphas.reshape(Q, 1).astype(jnp.float32),
+      jnp.asarray(c, jnp.float32).reshape(1, 1))
+    return (upd_w.reshape(P), upd_z.reshape(R),
+            alpha.reshape(()), q.reshape(()))

@@ -36,6 +36,46 @@ def pcdn_sparse_direction_ref(rows: Array, vals: Array, u: Array, v: Array,
     return d, g, h
 
 
+def pcdn_bundle_ref(vals: Array, pos: Array, z_R: Array, y_R: Array,
+                    w_B: Array, alphas: Array, c,
+                    kind: str = "logistic", l2: float = 0.0,
+                    sigma: float = 0.01, gamma: float = 0.0):
+    """Oracle for the fused support-restricted bundle step
+    (kernels/pcdn_bundle): the unfused pipeline — support-gathered
+    factors -> g/h -> Eq. 5 direction -> Delta -> support-compressed
+    margin delta -> batched Armijo — in plain f32 jnp. Returns
+    (upd_w, upd_z, alpha, n_steps) matching the kernel."""
+    loss = get_loss(kind)
+    z_R = z_R.astype(jnp.float32)
+    y_R = y_R.astype(jnp.float32)
+    vals = vals.astype(jnp.float32)
+    w_B = w_B.astype(jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    u_R = c * loss.dz(z_R, y_R)
+    v_R = c * loss.d2z(z_R, y_R)
+    g = jnp.sum(jnp.take(u_R, pos) * vals, axis=1) + l2 * w_B
+    h = jnp.maximum(jnp.sum(jnp.take(v_R, pos) * jnp.square(vals), axis=1)
+                    + l2, HESSIAN_FLOOR)
+    d = newton_direction(g, h, w_B)
+    Delta = (jnp.sum(g * d) + gamma * jnp.sum(h * jnp.square(d)) +
+             jnp.sum(jnp.abs(w_B + d)) - jnp.sum(jnp.abs(w_B)))
+    delta_R = jnp.zeros_like(z_R).at[pos].add(vals * d[:, None])
+    alphas = alphas.astype(jnp.float32)
+    zq = z_R[None, :] + alphas[:, None] * delta_R[None, :]
+    lo = c * jnp.sum(loss.value(zq, y_R[None, :]) -
+                     loss.value(z_R, y_R)[None, :], axis=1)
+    wq = w_B[None, :] + alphas[:, None] * d[None, :]
+    f_deltas = lo + jnp.sum(jnp.abs(wq), axis=1) - jnp.sum(jnp.abs(w_B))
+    if l2:
+        f_deltas = f_deltas + 0.5 * l2 * (
+            jnp.sum(jnp.square(wq), axis=1) - jnp.sum(jnp.square(w_B)))
+    ok = f_deltas <= sigma * alphas * Delta
+    first = jnp.argmax(ok)
+    alpha = jnp.where(jnp.any(ok), alphas[first], 0.0)
+    return (alpha * d, alpha * delta_R, alpha,
+            jnp.asarray(first + 1, jnp.int32))
+
+
 def pcdn_linesearch_ref(z: Array, delta: Array, y: Array, alphas: Array,
                         kind: str = "logistic") -> Array:
     """(Q,) per-candidate loss deltas: sum_i phi(z + a*delta) - phi(z)."""

@@ -50,6 +50,14 @@ def add_solver_args(ap: argparse.ArgumentParser):
     ap.add_argument("--shrink", action="store_true",
                     help="active-set shrinking (DESIGN.md section 8.2; "
                          "both backends)")
+    ap.add_argument("--ls-scope", default="auto",
+                    choices=["auto", "support", "full"],
+                    help="line-search / margin-maintenance scope "
+                         "(DESIGN.md section 11): 'support' restricts "
+                         "every per-sample pass of a bundle step to the "
+                         "bundle's row support (padded_csc layout; "
+                         "O(P*k_max*Q) instead of O(s*Q)); 'auto' picks "
+                         "it whenever it wins; both backends")
     ap.add_argument("--warm-start", default=None, metavar="CKPT",
                     help="w0 from a .npy vector or a JSON file (a dense "
                          "list or the sparse weight record a previous "
@@ -84,7 +92,8 @@ def build_pcdn_config(args, **overrides) -> PCDNConfig:
     backend uses — max_outer / tol_kkt come from here)."""
     kw = dict(P=args.P, max_outer=args.max_outer, tol_kkt=args.tol,
               seed=args.seed, shrink=args.shrink,
-              use_kernels=args.use_kernels)
+              use_kernels=args.use_kernels,
+              ls_scope=getattr(args, "ls_scope", "auto"))
     kw.update(overrides)
     return PCDNConfig(**kw)
 
@@ -95,7 +104,8 @@ def build_sharded_config(args, c: float, loss: str) -> ShardedPCDNConfig:
     return ShardedPCDNConfig(
         P_local=max(args.P // max(args.model_parallel, 1), 1), c=c,
         loss_name=loss, seed=args.seed, shrink=args.shrink,
-        use_kernels=args.use_kernels, tol_kkt=args.tol)
+        use_kernels=args.use_kernels, tol_kkt=args.tol,
+        ls_scope=getattr(args, "ls_scope", "auto"))
 
 
 def make_backend(args, X, y, c: float, loss: str, outer=None):

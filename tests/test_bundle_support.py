@@ -1,0 +1,315 @@
+"""Support-restricted bundle step equivalence suite (DESIGN.md §11).
+
+The support-scoped line search / margin maintenance must be a pure
+re-scoping of the full pass: phi(z_i + alpha * 0) - phi(z_i) == 0
+wherever the bundle touches no nonzero of row i, so the accepted alpha,
+the per-bundle n_steps, and the whole objective trajectory must match
+the full-scope solver across losses, layouts, shrink on/off, and the
+sharded 1x1-mesh backend. Plus the row-support primitive itself, the
+fused `pcdn_bundle` kernel vs its unfused pipeline, and the
+BENCH_bundle.json headline guard.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PCDNConfig, make_problem, solve
+from repro.core import bundles as B
+from repro.core.design_matrix import padded_row_support
+from repro.core.linesearch import (ArmijoParams, armijo_batched,
+                                   armijo_chunked, candidate_alphas,
+                                   objective_delta)
+from repro.core.losses import get_loss
+from repro.core.pcdn import make_bundle_step, resolve_ls_scope
+from repro.data import make_classification
+
+RNG = np.random.default_rng(11)
+
+
+def _problem_pair(s=96, n=70, sparsity=0.95, loss="logistic", l2=0.0,
+                  seed=3):
+    X, y, _ = make_classification(s, n, sparsity=sparsity, corr=0.3,
+                                  seed=seed)
+    pd = make_problem(X, y, c=1.0, loss=loss, elastic_net_l2=l2)
+    ps = make_problem(X, y, c=1.0, loss=loss, elastic_net_l2=l2,
+                      layout="padded_csc")
+    return pd, ps
+
+
+# -- the row-support primitive ------------------------------------------------
+
+def test_padded_row_support_unique_sorted_sentinel():
+    s = 50
+    rows = jnp.asarray(RNG.integers(0, s + 1, size=(8, 6)), jnp.int32)
+    sup = padded_row_support(rows, s)
+    sup_np = np.asarray(sup.support)
+    assert sup_np.shape == (48,)
+    assert np.all(np.diff(sup_np) >= 0)                    # sorted
+    real = sup_np[sup_np < s]
+    assert len(real) == len(set(real.tolist()))            # unique
+    assert set(real.tolist()) == set(
+        r for r in np.asarray(rows).ravel().tolist() if r < s)
+    # pos maps every entry back to its own row id
+    assert np.array_equal(sup_np[np.asarray(sup.pos)], np.asarray(rows))
+
+
+def test_slab_matvec_support_matches_dense_delta():
+    _, ps = _problem_pair(seed=5)
+    design = ps.design
+    idx = jnp.asarray(RNG.permutation(70)[:16], jnp.int32)
+    slab = design.gather_slab(idx)
+    sup = design.slab_row_support(slab)
+    d = jnp.asarray(RNG.standard_normal(16), jnp.float32)
+    dense = design.slab_matvec(slab, d)
+    delta_R = design.slab_matvec_support(slab, sup.pos, d)
+    scattered = design.scatter_support(jnp.zeros_like(dense), sup.support,
+                                       delta_R)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(scattered))
+
+
+# -- scope resolution ---------------------------------------------------------
+
+def test_resolve_scope_rules():
+    from repro.core.pcdn import AUTO_SUPPORT_MARGIN
+
+    pd, ps = _problem_pair(s=2048, n=128, sparsity=0.995, seed=41)
+    k = ps.design.k_max
+    p_small = max(1, ps.n_samples // (AUTO_SUPPORT_MARGIN * k))  # margin ok
+    p_big = ps.n_samples // (AUTO_SUPPORT_MARGIN * k) + 1        # margin not
+    assert resolve_ls_scope(PCDNConfig(P=8), pd) == "full"       # dense auto
+    assert resolve_ls_scope(PCDNConfig(P=p_small), ps) == "support"
+    assert resolve_ls_scope(PCDNConfig(P=p_big), ps) == "full"
+    assert resolve_ls_scope(PCDNConfig(P=p_big, ls_scope="support"),
+                            ps) == "support"                     # forced
+    assert resolve_ls_scope(PCDNConfig(P=p_small, ls_scope="full"),
+                            ps) == "full"
+    with pytest.raises(ValueError):
+        resolve_ls_scope(PCDNConfig(P=8, ls_scope="support"), pd)
+
+
+# -- per-step equivalence: identical accepted alpha and n_steps ---------------
+
+@pytest.mark.parametrize("loss", ["logistic", "squared_hinge", "squared"])
+@pytest.mark.parametrize("l2", [0.0, 0.3])
+def test_bundle_step_support_matches_full(loss, l2):
+    _, ps = _problem_pair(loss=loss, l2=l2, seed=17)
+    n, s = ps.n_features, ps.n_samples
+    w = jnp.asarray(RNG.standard_normal(n).astype(np.float32))
+    w = w * (RNG.random(n) < 0.4)
+    z = ps.margins(w)
+    step_full = make_bundle_step(ps, PCDNConfig(P=16, ls_scope="full"))
+    step_sup = make_bundle_step(ps, PCDNConfig(P=16, ls_scope="support"))
+    step_ker = make_bundle_step(ps, PCDNConfig(P=16, ls_scope="support",
+                                               use_kernels=True))
+    idxs = B.partition(jax.random.PRNGKey(0), n, 16)
+    cf = cs = ck = (w, z)
+    for t in range(idxs.shape[0]):
+        cf, (qf, af) = step_full(cf, idxs[t])
+        cs, (qs, a_s) = step_sup(cs, idxs[t])
+        ck, (qk, ak) = step_ker(ck, idxs[t])
+        assert float(af) == float(a_s), (t, float(af), float(a_s))
+        assert int(qf) == int(qs)
+        np.testing.assert_allclose(float(af), float(ak), rtol=0, atol=0)
+        assert int(qf) == int(qk)
+    np.testing.assert_allclose(np.asarray(cf[0]), np.asarray(cs[0]),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(cf[1]), np.asarray(cs[1]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cs[0]), np.asarray(ck[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# -- trajectory equivalence: losses x layouts x shrink ------------------------
+
+@pytest.mark.parametrize("loss", ["logistic", "squared_hinge", "squared"])
+@pytest.mark.parametrize("shrink", [False, True])
+def test_trajectories_support_vs_full(loss, shrink):
+    """Support-scoped sparse == full-scope sparse == full-scope dense."""
+    pd, ps = _problem_pair(loss=loss, seed=23)
+    kw = dict(P=24, max_outer=12, seed=4, shrink=shrink)
+    rd = solve(pd, PCDNConfig(ls_scope="full", **kw))
+    rf = solve(ps, PCDNConfig(ls_scope="full", **kw))
+    rs = solve(ps, PCDNConfig(ls_scope="support", **kw))
+    np.testing.assert_allclose(rs.history.objective, rf.history.objective,
+                               rtol=1e-6)
+    np.testing.assert_allclose(rs.history.objective, rd.history.objective,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(rs.w), np.asarray(rf.w),
+                               atol=1e-5)
+    # n_steps equality is pinned per-step from identical carries in
+    # test_bundle_step_support_matches_full; across whole trajectories
+    # the CONVERGED iteration evaluates the Armijo check at its exact
+    # boundary (d ~ 0 => f_delta ~ 0 <= sigma*alpha*Delta ~ 0), where
+    # summation-order ulps can legitimately flip a candidate.
+
+
+def test_chunked_equals_batched_linesearch():
+    """armijo_chunked accepts the same alpha/n_steps as armijo_batched."""
+    loss = get_loss("logistic")
+    params = ArmijoParams()
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        s, P = 200, 12
+        z = jnp.asarray(rng.standard_normal(s), jnp.float32)
+        # large deltas force deep backtracking on some seeds
+        delta = jnp.asarray(rng.standard_normal(s) * (10.0 ** seed),
+                            jnp.float32)
+        y = jnp.asarray(np.sign(rng.standard_normal(s)), jnp.float32)
+        w_B = jnp.asarray(rng.standard_normal(P), jnp.float32)
+        d_B = jnp.asarray(rng.standard_normal(P), jnp.float32)
+        Delta = jnp.asarray(-abs(rng.standard_normal()), jnp.float32)
+        rb = armijo_batched(loss, 1.0, z, delta, y, w_B, d_B, Delta, params)
+        rc = armijo_chunked(loss, 1.0, z, delta, y, w_B, d_B, Delta, params)
+        if bool(rb.accepted):
+            assert float(rb.alpha) == float(rc.alpha)
+            assert int(rb.n_steps) == int(rc.n_steps)
+        assert bool(rb.accepted) == bool(rc.accepted)
+
+
+# -- sharded 1x1-mesh backend -------------------------------------------------
+
+def _csr_of(X):
+    from repro.data.libsvm import CSRMatrix
+    rows, cols = np.nonzero(X)
+    vals = X[rows, cols].astype(np.float32)
+    indptr = np.concatenate(
+        [[0], np.cumsum(np.bincount(rows, minlength=X.shape[0]))]
+    ).astype(np.int64)
+    return CSRMatrix(vals, cols.astype(np.int32), indptr, X.shape)
+
+
+def test_sharded_1x1_support_matches_full():
+    from jax.sharding import Mesh
+    from repro.engine import ShardedBackend, ShardedPCDNConfig
+    from repro.engine import loop as engine_loop
+
+    X, y, _ = make_classification(120, 80, sparsity=0.96, corr=0.3, seed=9)
+    csr = _csr_of(X)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    res = {}
+    for scope in ("full", "support"):
+        cfg = ShardedPCDNConfig(P_local=16, c=1.0, seed=5, ls_scope=scope)
+        be = ShardedBackend(csr, y, mesh, cfg, layout="padded_csc")
+        res[scope] = engine_loop.solve(be, 1.0, max_outer=10, tol_kkt=1e-6)
+    np.testing.assert_allclose(res["support"].history.objective,
+                               res["full"].history.objective, rtol=1e-6)
+    np.testing.assert_array_equal(res["support"].history.ls_steps,
+                                  res["full"].history.ls_steps)
+
+
+def test_sharded_support_requires_batched_ls():
+    from jax.sharding import Mesh
+    from repro.engine import ShardedBackend, ShardedPCDNConfig
+
+    X, y, _ = make_classification(60, 40, sparsity=0.9, corr=0.3, seed=2)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    cfg = ShardedPCDNConfig(P_local=8, c=1.0, ls_scope="support",
+                            ls_kind="backtracking")
+    with pytest.raises(ValueError, match="ls_scope='support'"):
+        ShardedBackend(_csr_of(X), y, mesh, cfg, layout="padded_csc")
+
+
+# -- fused kernel vs the unfused pipeline -------------------------------------
+
+@pytest.mark.parametrize("kind", ["logistic", "squared_hinge", "squared"])
+@pytest.mark.parametrize("l2", [0.0, 0.2])
+def test_pcdn_bundle_kernel_matches_ref(kind, l2):
+    from repro.kernels import ops, ref
+
+    _, ps = _problem_pair(s=130, n=90, sparsity=0.93, seed=31)
+    design = ps.design
+    idx = jnp.asarray(
+        np.concatenate([RNG.permutation(90)[:13], [90, 90, 90]]),
+        jnp.int32)                                  # ragged: 3 sentinels
+    slab = design.gather_slab(idx)
+    sup = design.slab_row_support(slab)
+    z = jnp.asarray(RNG.standard_normal(130), jnp.float32)
+    y = jnp.asarray(np.sign(RNG.standard_normal(130)), jnp.float32)
+    z_R = jnp.take(z, sup.support, mode="fill", fill_value=0)
+    y_R = jnp.take(y, sup.support, mode="fill", fill_value=1)
+    w_B, _ = B.gather_vec(
+        jnp.asarray(RNG.standard_normal(90), jnp.float32), idx)
+    alphas = candidate_alphas(ArmijoParams(), jnp.float32)
+    args = (slab.vals, sup.pos, z_R, y_R, w_B, alphas, 1.3)
+    kw = dict(kind=kind, l2=l2, sigma=0.01, gamma=0.0)
+    uw1, uz1, a1, q1 = ops.pcdn_bundle(*args, **kw)
+    uw2, uz2, a2, q2 = ref.pcdn_bundle_ref(*args, **kw)
+    assert float(a1) == float(a2)
+    assert int(q1) == int(q2)
+    np.testing.assert_allclose(uw1, uw2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(uz1, uz2, rtol=1e-5, atol=1e-6)
+
+
+# -- hypothesis properties ----------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["logistic", "squared_hinge", "squared"]))
+@settings(max_examples=25, deadline=None)
+def test_objective_delta_zero_alpha_is_zero(seed, kind):
+    """F(w + 0*d) - F(w) must be EXACTLY zero, not merely small — the
+    support restriction's correctness rests on this bitwise identity."""
+    rng = np.random.default_rng(seed)
+    s, P = 40, 6
+    loss = get_loss(kind)
+    z = jnp.asarray(rng.standard_normal(s) * 5, jnp.float32)
+    delta = jnp.asarray(rng.standard_normal(s) * 100, jnp.float32)
+    y = jnp.asarray(np.sign(rng.standard_normal(s)), jnp.float32)
+    w_B = jnp.asarray(rng.standard_normal(P), jnp.float32)
+    d_B = jnp.asarray(rng.standard_normal(P), jnp.float32)
+    out = objective_delta(loss, 2.0, z, delta, y, w_B, d_B,
+                          jnp.float32(0.0), l2=0.5)
+    assert float(out) == 0.0
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_fused_bundle_matches_unfused_property(seed):
+    """Random slabs: the fused kernel's update == the jnp support path."""
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(seed)
+    s, P, k = 60, 9, 5
+    rows = jnp.asarray(rng.integers(0, s + 1, size=(P, k)), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal((P, k)).astype(np.float32) *
+                       (np.asarray(rows) < s))
+    sup = padded_row_support(rows, s)
+    z = jnp.asarray(rng.standard_normal(s), jnp.float32)
+    y = jnp.asarray(np.sign(rng.standard_normal(s)), jnp.float32)
+    z_R = jnp.take(z, sup.support, mode="fill", fill_value=0)
+    y_R = jnp.take(y, sup.support, mode="fill", fill_value=1)
+    w_B = jnp.asarray(rng.standard_normal(P), jnp.float32)
+    alphas = candidate_alphas(ArmijoParams(), jnp.float32)
+    args = (vals, sup.pos, z_R, y_R, w_B, alphas, 1.0)
+    uw1, uz1, a1, q1 = ops.pcdn_bundle(*args)
+    uw2, uz2, a2, q2 = ref.pcdn_bundle_ref(*args)
+    assert float(a1) == float(a2) and int(q1) == int(q2)
+    np.testing.assert_allclose(uw1, uw2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(uz1, uz2, rtol=1e-5, atol=1e-6)
+
+
+# -- the committed benchmark headline -----------------------------------------
+
+def test_bench_bundle_reports_support_headline():
+    """The committed BENCH_bundle.json must report the acceptance number:
+    support-scoped line search >= 2x over full-scope at sparsity 0.999
+    (full-run figures; CI smoke runs only overwrite the file AFTER the
+    test stage)."""
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_bundle.json")
+    if not os.path.exists(path):
+        pytest.skip("no BENCH_bundle.json checked out")
+    payload = json.load(open(path))
+    if payload.get("smoke"):
+        pytest.skip("local --smoke run overwrote the committed full-run "
+                    "figures; the acceptance number is pinned on full runs")
+    assert payload["linesearch_speedup_at_0999"] >= 2.0
+    assert payload["bundle_step_speedup_at_0999"] >= 2.0
+    assert payload["objective_traj_max_rel_diff"] <= 1e-6
