@@ -1,17 +1,23 @@
 """Perf hillclimb driver (EXPERIMENTS.md section Perf).
 
-Three cells selected from the baseline roofline table:
-  A. qwen1.5-32b x prefill_32k  — worst useful-flops fraction (0.07):
-     40 heads don't divide the 16-wide model axis -> 16x-replicated
-     attention. Change: zero-initialized head padding 40->48 (output-exact).
-  B. grok-1-314b x train_4k     — most collective-bound cell (largest
-     absolute collective term). Changes: expert-sharding rule fix,
-     dispatch-buffer dtype, capacity factor.
-  C. pcdn solver (the paper's own technique) — collective-schedule ladder:
-     faithful sequential Armijo + unfused psums -> fused psums -> batched
-     candidates (single psum), plus the kernel-fusion memory accounting.
+Two cells, both about the paper's own solver:
 
-Usage: PYTHONPATH=src python -m benchmarks.hillclimb [--cell A|B|C]
+  kernel (default) — greedy coordinate hillclimb of the fused bundle
+     kernel's launch config (kernels/autotune.tune strategy="hillclimb"):
+     start from the hard-coded default launch, improve one axis at a
+     time (block_q tiling of the Armijo candidate grid, the impl axis),
+     log every accepted step. The climb trajectory IS the deliverable:
+     it shows which axis bought what on this backend, and the winner is
+     persisted into the autotune cache so every later solve picks it up.
+  ladder — the collective-schedule ladder of the sharded solver:
+     faithful sequential Armijo + unfused psums -> fused psums ->
+     batched candidates (single psum), with kernel-fusion memory
+     accounting. (The historical cells A/B — transformer dry-run
+     experiments from the seed scaffold, unrelated to this paper's
+     solver — were retired; their archived results remain under
+     results/hillclimb/.)
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb [--cell kernel|ladder|all]
 Writes benchmarks/results/hillclimb/<name>.json.
 """
 import os
@@ -35,63 +41,40 @@ def save(name, payload):
               flush=True)
 
 
-def cell_a():
-    """qwen1.5-32b head padding."""
-    from repro.launch import dryrun
-    import repro.configs.qwen1_5_32b as q
-    base = q.CONFIG
-    for cell in ("prefill_32k", "train_4k"):
-        print(f"[A] qwen1.5-32b {cell} baseline...", flush=True)
-        res = dryrun.lower_cell("qwen1.5-32b", cell, False)
-        save(f"A_qwen15_{cell}_baseline", res)
-        print(f"[A] qwen1.5-32b {cell} pad_heads=48...", flush=True)
-        q.CONFIG = base.replace(pad_heads=48, pad_kv_heads=48)
-        try:
-            res = dryrun.lower_cell("qwen1.5-32b", cell, False)
-            res["variant"] = "pad_heads=48"
-            save(f"A_qwen15_{cell}_padded", res)
-            print(f"[A] qwen1.5-32b {cell} padded + fused_qkv...",
+def cell_kernel(smoke: bool = False):
+    """Autotune hillclimb on the fused bundle kernel (+ its sparse
+    direction sibling): the measured counterpart of bench_kernels'
+    exhaustive sweep, logging the greedy trajectory step by step."""
+    import numpy as np
+    from benchmarks import bench_kernels as bk
+    from repro.kernels import autotune
+
+    cells = [c for c in (bk.SMOKE_CELLS if smoke else bk.CELLS)
+             if c[0] in ("pcdn_bundle", "pcdn_sparse_direction")]
+    import jax.numpy as jnp
+    for kernel, shape, build in cells:
+        print(f"[kernel] climbing {kernel} {shape}...", flush=True)
+        runner, _, _ = build(jnp.float32)
+        res = autotune.tune(kernel, runner, autotune.shape_bucket(**shape),
+                            jnp.float32, strategy="hillclimb",
+                            repeats=2 if smoke else 5, persist=not smoke)
+        for i, step in enumerate(res.trajectory):
+            print(f"  step {i}: {step['config']} -> {step['us']:.0f}us",
                   flush=True)
-            q.CONFIG = base.replace(pad_heads=48, pad_kv_heads=48,
-                                    fused_qkv=True)
-            res = dryrun.lower_cell("qwen1.5-32b", cell, False)
-            res["variant"] = "pad_heads=48 + fused_qkv"
-            save(f"A_qwen15_{cell}_padded_fused", res)
-        finally:
-            q.CONFIG = base
+        shape_tag = "_".join(f"{k}{v}" for k, v in sorted(shape.items()))
+        save(f"kernel_{kernel}_{shape_tag}", {
+            "kernel": kernel, "shape": shape,
+            "default_us": res.default_us, "tuned_us": res.us,
+            "speedup": res.speedup,
+            "trajectory": list(res.trajectory),
+            "n_measured": len(res.table),
+        })
+        print(f"  {kernel}: default={res.default_us:.0f}us "
+              f"tuned={res.us:.0f}us x{res.speedup:.2f}", flush=True)
 
 
-def cell_b():
-    """grok-1-314b train_4k: capacity-factor iteration on top of the
-    expert-sharding fix (the fix itself is measured against the archived
-    pre-fix run: flops 1.306e19 -> see baseline)."""
-    from repro.launch import dryrun
-    import repro.configs.grok_1_314b as g
-    import dataclasses
-    base = g.CONFIG
-    print("[B] grok train_4k baseline (post expert-fix)...", flush=True)
-    res = dryrun.lower_cell("grok-1-314b", "train_4k", False)
-    save("B_grok_train_baseline", res)
-    print("[B] grok train_4k capacity_factor=1.0...", flush=True)
-    g.CONFIG = base.replace(moe=dataclasses.replace(base.moe,
-                                                    capacity_factor=1.0))
-    try:
-        res = dryrun.lower_cell("grok-1-314b", "train_4k", False)
-        res["variant"] = "capacity_factor=1.0"
-        save("B_grok_train_cap10", res)
-        print("[B] grok train_4k + fused_qkv...", flush=True)
-        g.CONFIG = base.replace(
-            moe=dataclasses.replace(base.moe, capacity_factor=1.0),
-            fused_qkv=True)
-        res = dryrun.lower_cell("grok-1-314b", "train_4k", False)
-        res["variant"] = "capacity_factor=1.0 + fused_qkv"
-        save("B_grok_train_cap10_fusedqkv", res)
-    finally:
-        g.CONFIG = base
-
-
-def cell_c():
-    """pcdn solver ladder."""
+def cell_ladder():
+    """pcdn collective-schedule ladder (sharded solver)."""
     from repro.launch.dryrun import lower_solver_cell
     ladder = [
         ("baseline_faithful", dict(ls_kind="backtracking", fuse=False)),
@@ -99,21 +82,22 @@ def cell_c():
         ("batched_linesearch", dict(ls_kind="batched", fuse=True)),
     ]
     for name, kw in ladder:
-        print(f"[C] pcdn {name}...", flush=True)
+        print(f"[ladder] pcdn {name}...", flush=True)
         res = lower_solver_cell(**kw)
         save(f"C_pcdn_{name}", res)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", default="all", choices=["A", "B", "C", "all"])
+    ap.add_argument("--cell", default="kernel",
+                    choices=["kernel", "ladder", "all"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, no cache writes")
     args = ap.parse_args()
-    if args.cell in ("A", "all"):
-        cell_a()
-    if args.cell in ("B", "all"):
-        cell_b()
-    if args.cell in ("C", "all"):
-        cell_c()
+    if args.cell in ("kernel", "all"):
+        cell_kernel(smoke=args.smoke)
+    if args.cell in ("ladder", "all"):
+        cell_ladder()
 
 
 if __name__ == "__main__":

@@ -20,7 +20,14 @@ single `DesignMatrix` interface with two interchangeable backends
     margin update z += alpha * X_B d_B a scatter-add at `col_rows`.
 
 Both backends are registered pytrees, so an `L1Problem` carrying either
-flows through `jax.jit` / `lax.scan` unchanged. Bundle slabs are small
+flows through `jax.jit` / `lax.scan` unchanged.
+
+Mixed precision (DESIGN.md section 12): values may be STORED in bf16
+(`dtype=jnp.bfloat16` at construction) while every reduction below
+ACCUMULATES in f32 — products/sums upcast via
+`jnp.promote_types(storage, float32)`, which is bitwise a no-op for f32
+storage. Solver state (w, z, u, v) stays f32 regardless; only the
+design values and their HBM traffic shrink. Bundle slabs are small
 NamedTuples (`DenseSlab` / `SparseSlab`) produced by `gather_slab` and
 consumed by `slab_grad_hess` / `slab_matvec` — the only three methods the
 inner solver loops touch.
@@ -135,15 +142,20 @@ class DenseDesign(DesignMatrix):
     def dtype(self):
         return self.X.dtype
 
+    @property
+    def acc_dtype(self):
+        """Accumulation dtype: f32 for bf16 storage, identity for f32+."""
+        return jnp.promote_types(self.X.dtype, jnp.float32)
+
     # -- whole-matrix products ----------------------------------------------
     def matvec(self, w: Array) -> Array:
-        return self.X @ w
+        return self.X.astype(self.acc_dtype) @ w
 
     def rmatvec(self, u: Array) -> Array:
-        return self.X.T @ u
+        return self.X.T.astype(self.acc_dtype) @ u
 
     def column_norms_sq(self) -> Array:
-        return jnp.sum(jnp.square(self.X), axis=0)
+        return jnp.sum(jnp.square(self.X.astype(self.acc_dtype)), axis=0)
 
     # -- bundle slab protocol -------------------------------------------------
     def gather_slab(self, idx: Array) -> DenseSlab:
@@ -161,13 +173,14 @@ class DenseDesign(DesignMatrix):
         The two tall-skinny matvecs are the compute hot-spot that
         kernels/pcdn_direction fuses on TPU (DESIGN.md section 3.1).
         """
-        g = slab.XB.T @ u
-        h = jnp.square(slab.XB).T @ v
+        XB = slab.XB.astype(self.acc_dtype)
+        g = XB.T @ u
+        h = jnp.square(XB).T @ v
         return g, h
 
     def slab_matvec(self, slab: DenseSlab, d: Array) -> Array:
         """delta_z = X_B @ d_B, the (s,) margin delta of a bundle step."""
-        return slab.XB @ d
+        return slab.XB.astype(self.acc_dtype) @ d
 
     def slab_coordinate_deltas(self, slab: DenseSlab, d: Array) -> Array:
         """(P, s) per-coordinate margin deltas d_j * X[:, j] — the blind
@@ -225,20 +238,27 @@ class PaddedCSCDesign(DesignMatrix):
     def dtype(self):
         return self.col_vals.dtype
 
+    @property
+    def acc_dtype(self):
+        """Accumulation dtype: f32 for bf16 storage, identity for f32+."""
+        return jnp.promote_types(self.col_vals.dtype, jnp.float32)
+
     # -- whole-matrix products ----------------------------------------------
     def matvec(self, w: Array) -> Array:
         """z = X @ w as one scatter-add of every weighted nonzero."""
-        z = jnp.zeros((self._n_samples,), self.col_vals.dtype)
-        return z.at[self.col_rows].add(self.col_vals * w[:, None],
-                                       mode="drop")
+        acc = self.acc_dtype
+        z = jnp.zeros((self._n_samples,), acc)
+        return z.at[self.col_rows].add(
+            self.col_vals.astype(acc) * w[:, None], mode="drop")
 
     def rmatvec(self, u: Array) -> Array:
         """X^T u: gather u at each column's rows, masked segment sum."""
         ug = jnp.take(u, self.col_rows, mode="fill", fill_value=0)
-        return jnp.sum(ug * self.col_vals, axis=1)
+        return jnp.sum(ug * self.col_vals.astype(self.acc_dtype), axis=1)
 
     def column_norms_sq(self) -> Array:
-        return jnp.sum(jnp.square(self.col_vals), axis=1)
+        return jnp.sum(jnp.square(self.col_vals.astype(self.acc_dtype)),
+                       axis=1)
 
     # -- bundle slab protocol -------------------------------------------------
     def gather_slab(self, idx: Array) -> SparseSlab:
@@ -255,16 +275,19 @@ class PaddedCSCDesign(DesignMatrix):
 
     def slab_grad_hess(self, slab: SparseSlab, u: Array, v: Array):
         """Masked segment reductions over the padded column layout."""
+        vals = slab.vals.astype(self.acc_dtype)
         ug = jnp.take(u, slab.rows, mode="fill", fill_value=0)
         vg = jnp.take(v, slab.rows, mode="fill", fill_value=0)
-        g = jnp.sum(ug * slab.vals, axis=1)
-        h = jnp.sum(vg * jnp.square(slab.vals), axis=1)
+        g = jnp.sum(ug * vals, axis=1)
+        h = jnp.sum(vg * jnp.square(vals), axis=1)
         return g, h
 
     def slab_matvec(self, slab: SparseSlab, d: Array) -> Array:
         """delta_z via scatter-add at col_rows (duplicate rows accumulate)."""
-        z = jnp.zeros((self._n_samples,), self.col_vals.dtype)
-        return z.at[slab.rows].add(slab.vals * d[:, None], mode="drop")
+        acc = self.acc_dtype
+        z = jnp.zeros((self._n_samples,), acc)
+        return z.at[slab.rows].add(slab.vals.astype(acc) * d[:, None],
+                                   mode="drop")
 
     # -- support-scoped slab protocol (DESIGN.md section 11) -----------------
     def slab_row_support(self, slab: SparseSlab) -> SlabSupport:
@@ -286,10 +309,11 @@ class PaddedCSCDesign(DesignMatrix):
         so the gather never touches the (s,)-sized vectors. Bitwise equal
         to the full-scope reduction: same addends in the same k-order.
         """
+        vals = slab.vals.astype(self.acc_dtype)
         ug = jnp.take(u_R, pos)
         vg = jnp.take(v_R, pos)
-        g = jnp.sum(ug * slab.vals, axis=1)
-        h = jnp.sum(vg * jnp.square(slab.vals), axis=1)
+        g = jnp.sum(ug * vals, axis=1)
+        h = jnp.sum(vg * jnp.square(vals), axis=1)
         return g, h
 
     def slab_matvec_support(self, slab: SparseSlab, pos: Array,
@@ -297,9 +321,10 @@ class PaddedCSCDesign(DesignMatrix):
         """Support-compressed margin delta: (r_max,) values delta_R with
         delta_R[r] = (X_B d_B)[support[r]]. Sentinel support slots stay
         exactly 0 (padding entries carry value 0)."""
+        acc = self.acc_dtype
         r_max = pos.shape[0] * pos.shape[1]
-        out = jnp.zeros((r_max,), slab.vals.dtype)
-        return out.at[pos].add(slab.vals * d[:, None])
+        out = jnp.zeros((r_max,), acc)
+        return out.at[pos].add(slab.vals.astype(acc) * d[:, None])
 
     def scatter_support(self, z: Array, support: Array, upd: Array) -> Array:
         """z[support] += upd with sentinel slots dropped (the support-
@@ -309,10 +334,11 @@ class PaddedCSCDesign(DesignMatrix):
     def slab_coordinate_deltas(self, slab: SparseSlab, d: Array) -> Array:
         """(P, s) per-coordinate margin deltas (vmapped single scatters)."""
         s = self._n_samples
+        acc = self.acc_dtype
 
         def one(rows_j, vals_j, d_j):
-            return jnp.zeros((s,), self.col_vals.dtype).at[rows_j].add(
-                vals_j * d_j, mode="drop")
+            return jnp.zeros((s,), acc).at[rows_j].add(
+                vals_j.astype(acc) * d_j, mode="drop")
 
         return jax.vmap(one)(slab.rows, slab.vals, d)
 

@@ -56,6 +56,12 @@ class PCDNConfig:
     ls_chunk: int = 8            # candidate chunk of the full-scope search
     seed: int = 0
     use_kernels: bool = False    # route bundle math through Pallas kernels
+    # -- mixed precision (DESIGN.md section 12) ------------------------------
+    # storage dtype of the DESIGN VALUES ("float32" | "bfloat16"); solver
+    # state (w, z, y) stays f32 either way — every reduction accumulates
+    # in f32. Recorded here so artifacts/benchmarks can report it; the
+    # design matrix itself is built with this dtype by launch/common.
+    dtype: str = "float32"
     # -- active-set shrinking (CDN heritage; DESIGN.md section 8.2) ----------
     shrink: bool = False         # mask near-optimal zero features out of bundles
     shrink_tol: float = 0.01     # shrink j when w_j == 0 and |g_j| < 1 - shrink_tol

@@ -94,6 +94,13 @@ class L1Problem:
     def dtype(self):
         return self.design.dtype
 
+    @property
+    def solve_dtype(self):
+        """Dtype of the solver STATE (w, z, labels): f32 when the design
+        stores bf16 values (mixed-precision mode — fp32 accumulation for
+        the margin state, DESIGN.md section 12), identity otherwise."""
+        return jnp.promote_types(self.design.dtype, jnp.float32)
+
     # -- objective -----------------------------------------------------------
     def margins(self, w: Array) -> Array:
         return self.design.matvec(w)
@@ -213,7 +220,7 @@ class L1Problem:
         classical lambda_max is 1 / c_max and the path sweeps c UP from
         c_max (all-zero model) toward weaker regularization.
         """
-        z0 = jnp.zeros((self.n_samples,), self.dtype)
+        z0 = jnp.zeros((self.n_samples,), self.solve_dtype)
         u0 = self.loss.dz(z0, self.y)
         g0 = self.design.rmatvec(u0)
         denom = float(jnp.max(jnp.abs(g0)))
@@ -245,7 +252,9 @@ def make_problem(
     dense array if needed — handy for equivalence tests).
     """
     design = as_design(X, dtype=dtype, layout=layout, k_max=k_max)
-    y = jnp.asarray(np.asarray(y), dtype=dtype)
+    # labels live with the solver state: f32 even under bf16 storage
+    y = jnp.asarray(np.asarray(y),
+                    dtype=jnp.promote_types(dtype, jnp.float32))
     return L1Problem(design=design, y=y, c=float(c), loss_name=loss,
                      elastic_net_l2=float(elastic_net_l2))
 

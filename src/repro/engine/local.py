@@ -50,7 +50,9 @@ class LocalBackend:
 
     @property
     def dtype(self):
-        return self.problem.dtype
+        """Solver-state dtype: f32 even when the design stores bf16
+        values (margin state accumulates in f32 — DESIGN.md section 12)."""
+        return self.problem.solve_dtype
 
     def init_state(self, w0: Optional[Array] = None) -> EngineState:
         n, s = self.n_features, self.n_samples

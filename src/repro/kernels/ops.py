@@ -1,8 +1,24 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels: autotune-aware dispatchers.
 
-Handle padding to tile-aligned shapes, dtype plumbing, GQA head broadcast,
-and the custom_vjp for attention (forward = Pallas, backward = recompute
-with the jnp oracle — standard flash recomputation strategy).
+Each wrapper resolves its launch configuration at TRACE time through
+`kernels/autotune.resolve` — defaults (the historical hard-coded
+launches) <- the persisted autotune cache winner for this
+(kernel, shape-bucket, dtype, backend) cell <- explicit per-call
+overrides (a caller passing `block_*`/`impl` keeps exact control) — and
+then routes to one of two jitted implementations:
+
+  * impl="pallas": the Pallas kernel (padding to tile-aligned shapes
+    handled here);
+  * impl="xla":    the jnp oracle from `kernels/ref.py` under jit — the
+    same contract bit-for-bit at f32, and the measured winner on
+    backends where Pallas runs in interpreter mode.
+
+Because dispatch happens where the wrapper is CALLED (eagerly or inside
+an outer jit trace), `make_bundle_step`, the sharded backend's kernel
+routing and the serving `ModelBank` all pick tuned configs with no code
+changes. Set REPRO_AUTOTUNE=off to pin every wrapper to the defaults
+(tests/conftest.py does, so kernel-vs-oracle tests always exercise the
+Pallas route).
 
 Interpreter mode is controlled by the ``REPRO_KERNELS_INTERPRET`` env
 var: "auto" (default) runs compiled kernels on TPU and the interpreter
@@ -12,6 +28,9 @@ this module never initializes a jax backend and no import-order-
 sensitive monkeypatching is needed on real TPU. Assigning the legacy
 ``repro.kernels.ops.INTERPRET = False`` still works: a non-None value
 short-circuits the env lookup.
+
+Also here: the custom_vjp for attention (forward = Pallas, backward =
+recompute with the jnp oracle — standard flash recomputation strategy).
 """
 from __future__ import annotations
 
@@ -21,7 +40,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.pcdn_bundle import pcdn_bundle_kernel
 from repro.kernels.pcdn_direction import pcdn_direction_kernel
@@ -60,16 +79,16 @@ def _pad_to(x: Array, axis: int, multiple: int, value=0.0) -> Array:
     return jnp.pad(x, widths, constant_values=value)
 
 
-@functools.partial(jax.jit, static_argnames=("l2", "block_s", "block_p"))
-def pcdn_direction(XB: Array, u: Array, v: Array, w_B: Array,
-                   l2: float = 0.0, block_s: int = 512,
-                   block_p: int = 128):
-    """Fused bundle direction. XB (s, P) any float dtype -> (d, g, h) (P,).
+# ---------------------------------------------------------------------------
+# pcdn_direction
 
-    Pads s and P to tile multiples; padded samples carry u = v = 0 (no
+
+@functools.partial(jax.jit, static_argnames=("l2", "block_s", "block_p"))
+def _direction_pallas(XB: Array, u: Array, v: Array, w_B: Array,
+                      l2: float, block_s: int, block_p: int):
+    """Pads s and P to tile multiples; padded samples carry u = v = 0 (no
     contribution), padded features get w = 0 / g = 0 -> d = 0 and are
-    sliced away.
-    """
+    sliced away."""
     s, P = XB.shape
     bs = min(block_s, max(8, s))
     XBp = _pad_to(_pad_to(XB, 0, bs), 1, block_p)
@@ -77,21 +96,40 @@ def pcdn_direction(XB: Array, u: Array, v: Array, w_B: Array,
     vp = _pad_to(v, 0, bs)
     wp = _pad_to(w_B, 0, block_p)
     d, g, h = pcdn_direction_kernel(XBp, up, vp, wp, l2=l2, block_s=bs,
-                                    block_p=block_p, interpret=interpret_mode())
+                                    block_p=block_p,
+                                    interpret=interpret_mode())
     return d[:P], g[:P], h[:P]
 
 
-@functools.partial(jax.jit, static_argnames=("l2", "block_p"))
-def pcdn_sparse_direction(rows: Array, vals: Array, u: Array, v: Array,
-                          w_B: Array, l2: float = 0.0,
-                          block_p: int = 128):
-    """Fused sparse bundle direction over the padded-CSC slab layout.
+_direction_xla = jax.jit(ref.pcdn_direction_ref, static_argnames=("l2",))
 
-    rows/vals (P, k_max) from PaddedCSCDesign.gather_slab -> (d, g, h),
-    each (P,). Pads P to a tile multiple; padded features carry sentinel
-    rows (gather fills 0) and w = 0, so g = 0 -> d = 0, and are sliced
-    away. k_max is left unpadded — the kernel reduces over it in full.
-    """
+
+def pcdn_direction(XB: Array, u: Array, v: Array, w_B: Array,
+                   l2: float = 0.0, block_s: int | None = None,
+                   block_p: int | None = None, impl: str | None = None):
+    """Fused bundle direction. XB (s, P) any float dtype -> (d, g, h) (P,)."""
+    s, P = XB.shape
+    cfg = autotune.resolve(
+        "pcdn_direction", autotune.shape_bucket(s=s, p=P), XB.dtype,
+        {"impl": impl, "block_s": block_s, "block_p": block_p})
+    if cfg["impl"] == "xla":
+        return _direction_xla(XB, u, v, w_B, l2=l2)
+    return _direction_pallas(XB, u, v, w_B, l2=l2,
+                             block_s=cfg["block_s"], block_p=cfg["block_p"])
+
+
+# ---------------------------------------------------------------------------
+# pcdn_sparse_direction
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("l2", "block_p", "block_k"))
+def _sparse_direction_pallas(rows: Array, vals: Array, u: Array, v: Array,
+                             w_B: Array, l2: float, block_p: int,
+                             block_k: int | None):
+    """Pads P to a tile multiple; padded features carry sentinel rows
+    (gather fills 0) and w = 0, so g = 0 -> d = 0, and are sliced away.
+    The k axis is padded inside the raw launch when tiled."""
     P, _ = rows.shape
     s = u.shape[0]
     bp = min(block_p, max(8, P))
@@ -99,15 +137,47 @@ def pcdn_sparse_direction(rows: Array, vals: Array, u: Array, v: Array,
     valsp = _pad_to(vals, 0, bp)
     wp = _pad_to(w_B, 0, bp)
     d, g, h = pcdn_sparse_direction_kernel(rowsp, valsp, u, v, wp, l2=l2,
-                                           block_p=bp, interpret=interpret_mode())
+                                           block_p=bp, block_k=block_k,
+                                           interpret=interpret_mode())
     return d[:P], g[:P], h[:P]
 
 
+_sparse_direction_xla = jax.jit(ref.pcdn_sparse_direction_ref,
+                                static_argnames=("l2",))
+
+
+def pcdn_sparse_direction(rows: Array, vals: Array, u: Array, v: Array,
+                          w_B: Array, l2: float = 0.0,
+                          block_p: int | None = None,
+                          block_k: int | None = None,
+                          impl: str | None = None):
+    """Fused sparse bundle direction over the padded-CSC slab layout.
+
+    rows/vals (P, k_max) from PaddedCSCDesign.gather_slab -> (d, g, h),
+    each (P,) float32. vals may be bf16 storage (in-kernel f32 upcast).
+    """
+    P, K = rows.shape
+    s = u.shape[0]
+    cfg = autotune.resolve(
+        "pcdn_sparse_direction", autotune.shape_bucket(p=P, k=K, s=s),
+        vals.dtype,
+        {"impl": impl, "block_p": block_p, "block_k": block_k})
+    if cfg["impl"] == "xla":
+        return _sparse_direction_xla(rows, vals, u, v, w_B, l2=l2)
+    return _sparse_direction_pallas(rows, vals, u, v, w_B, l2=l2,
+                                    block_p=cfg["block_p"],
+                                    block_k=cfg["block_k"])
+
+
+# ---------------------------------------------------------------------------
+# pcdn_linesearch
+
+
 @functools.partial(jax.jit, static_argnames=("kind", "block_s"))
-def pcdn_linesearch(z: Array, delta: Array, y: Array, alphas: Array,
-                    kind: str = "logistic", block_s: int = 1024) -> Array:
-    """Batched candidate loss deltas (Q,). Pads s; padding contributes 0
-    because z = delta = y = 0 rows give phi(z+a*d) - phi(z) = 0."""
+def _linesearch_pallas(z: Array, delta: Array, y: Array, alphas: Array,
+                       kind: str, block_s: int) -> Array:
+    """Pads s; padding contributes 0 because z = delta = y = 0 rows give
+    phi(z+a*d) - phi(z) = 0."""
     s = z.shape[0]
     bs = min(block_s, max(8, s))
     zp = _pad_to(z, 0, bs)
@@ -117,30 +187,38 @@ def pcdn_linesearch(z: Array, delta: Array, y: Array, alphas: Array,
                                   block_s=bs, interpret=interpret_mode())
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("kind", "l2", "sigma", "gamma"))
-def pcdn_bundle(vals: Array, pos: Array, z_R: Array, y_R: Array,
-                w_B: Array, alphas: Array, c,
-                kind: str = "logistic", l2: float = 0.0,
-                sigma: float = 0.01, gamma: float = 0.0):
-    """Fused support-restricted bundle step (DESIGN.md section 11).
+_linesearch_xla = jax.jit(ref.pcdn_linesearch_ref,
+                          static_argnames=("kind",))
 
-    vals/pos (P, k_max) from `PaddedCSCDesign.gather_slab` +
-    `slab_row_support`; z_R/y_R (r_max,) margins and labels gathered at
-    the support rows (sentinel slots: z = 0, y = 1); alphas (Q,); `c`
-    may be a traced scalar (path sweeps). Returns (upd_w (P,),
-    upd_z (r_max,), alpha, n_steps) with upd_* pre-scaled by the
-    accepted alpha — the caller only scatters them at the bundle
-    indices / support rows.
 
-    Pads P and r_max to lane multiples: padded features carry vals = 0
+def pcdn_linesearch(z: Array, delta: Array, y: Array, alphas: Array,
+                    kind: str = "logistic", block_s: int | None = None,
+                    impl: str | None = None) -> Array:
+    """Batched candidate loss deltas (Q,)."""
+    s = z.shape[0]
+    cfg = autotune.resolve(
+        "pcdn_linesearch", autotune.shape_bucket(s=s, q=alphas.shape[0]),
+        z.dtype, {"impl": impl, "block_s": block_s})
+    if cfg["impl"] == "xla":
+        return _linesearch_xla(z, delta, y, alphas, kind=kind)
+    return _linesearch_pallas(z, delta, y, alphas, kind=kind,
+                              block_s=cfg["block_s"])
+
+
+# ---------------------------------------------------------------------------
+# pcdn_bundle
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "l2", "sigma", "gamma", "block_q"))
+def _bundle_pallas(vals: Array, pos: Array, z_R: Array, y_R: Array,
+                   w_B: Array, alphas: Array, c, kind: str, l2: float,
+                   sigma: float, gamma: float, block_q: int | None):
+    """Pads P and r_max to lane multiples: padded features carry vals = 0
     and w = 0 (d = 0, no l1/Delta contribution), padded support slots
     z = 0 / y = 1 / delta = 0 (loss delta exactly 0). pos is NOT
     re-targeted — padded slab entries keep pointing at real slots with
-    value 0. Single-program launch: VMEM caps the (Q, r_max) candidate
-    grid at ~2M f32, i.e. P * k_max * Q within ~8 MB — solver bundle
-    sizes, not a constraint at the repro's scales.
-    """
+    value 0."""
     P, _ = vals.shape
     R = z_R.shape[0]
     valsp = _pad_to(vals, 0, 8)
@@ -150,40 +228,120 @@ def pcdn_bundle(vals: Array, pos: Array, z_R: Array, y_R: Array,
     yp = _pad_to(y_R, 0, 128, value=1.0)
     upd_w, upd_z, alpha, q = pcdn_bundle_kernel(
         valsp, posp, zp, yp, wp, alphas, c, kind=kind, l2=l2,
-        sigma=sigma, gamma=gamma, interpret=interpret_mode())
+        sigma=sigma, gamma=gamma, block_q=block_q,
+        interpret=interpret_mode())
     return upd_w[:P], upd_z[:R], alpha, q
 
 
-@functools.partial(jax.jit, static_argnames=("block_b",))
-def serve_margins_dense(X: Array, idx: Array, val: Array,
-                        block_b: int = 128) -> Array:
-    """Serving margins over a dense request slab (DESIGN.md section 10.3).
+_bundle_xla = jax.jit(ref.pcdn_bundle_ref,
+                      static_argnames=("kind", "l2", "sigma", "gamma"))
 
-    X (B, n), idx/val (K, A) stacked model active sets with sentinel
-    idx == n -> (B, K) float32. Pads B to a tile multiple with zero
-    rows (their margins are sliced away).
+
+def pcdn_bundle(vals: Array, pos: Array, z_R: Array, y_R: Array,
+                w_B: Array, alphas: Array, c,
+                kind: str = "logistic", l2: float = 0.0,
+                sigma: float = 0.01, gamma: float = 0.0,
+                block_q: int | None = None, impl: str | None = None):
+    """Fused support-restricted bundle step (DESIGN.md section 11).
+
+    vals/pos (P, k_max) from `PaddedCSCDesign.gather_slab` +
+    `slab_row_support`; z_R/y_R (r_max,) margins and labels gathered at
+    the support rows (sentinel slots: z = 0, y = 1); alphas (Q,); `c`
+    may be a traced scalar (path sweeps). vals may be bf16 storage
+    (in-kernel f32 upcast). Returns (upd_w (P,), upd_z (r_max,), alpha,
+    n_steps) with upd_* pre-scaled by the accepted alpha — the caller
+    only scatters them at the bundle indices / support rows.
+
+    The default single-program launch keeps the whole (Q, r_max)
+    candidate grid in VMEM (~2M f32 cap); a tuned block_q tiles the
+    candidate axis and lifts that cap (kernels/pcdn_bundle).
     """
+    P, K = vals.shape
+    cfg = autotune.resolve(
+        "pcdn_bundle",
+        autotune.shape_bucket(p=P, k=K, r=z_R.shape[0], q=alphas.shape[0]),
+        vals.dtype, {"impl": impl, "block_q": block_q})
+    if cfg["impl"] == "xla":
+        return _bundle_xla(vals, pos, z_R, y_R, w_B, alphas, c, kind=kind,
+                           l2=l2, sigma=sigma, gamma=gamma)
+    return _bundle_pallas(vals, pos, z_R, y_R, w_B, alphas, c, kind=kind,
+                          l2=l2, sigma=sigma, gamma=gamma,
+                          block_q=cfg["block_q"])
+
+
+# ---------------------------------------------------------------------------
+# serving margins
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_a"))
+def _margins_dense_pallas(X: Array, idx: Array, val: Array, block_b: int,
+                          block_a: int | None) -> Array:
+    """Pads B to a tile multiple with zero rows (margins sliced away)."""
     B, _ = X.shape
     bb = min(block_b, max(8, B))
     Xp = _pad_to(X, 0, bb)
     z = serve_margins_dense_kernel(Xp, idx, val, block_b=bb,
+                                   block_a=block_a,
                                    interpret=interpret_mode())
     return z[:B]
 
 
+_margins_dense_xla = jax.jit(ref.serve_margins_dense_ref)
+
+
+def serve_margins_dense(X: Array, idx: Array, val: Array,
+                        block_b: int | None = None,
+                        block_a: int | None = None,
+                        impl: str | None = None) -> Array:
+    """Serving margins over a dense request slab (DESIGN.md section 10.3).
+
+    X (B, n), idx/val (K, A) stacked model active sets with sentinel
+    idx == n -> (B, K) float32. X and val may be bf16 storage.
+    """
+    B, n = X.shape
+    K, A = idx.shape
+    cfg = autotune.resolve(
+        "serve_margins_dense", autotune.shape_bucket(b=B, n=n, k=K, a=A),
+        val.dtype, {"impl": impl, "block_b": block_b, "block_a": block_a})
+    if cfg["impl"] == "xla":
+        return _margins_dense_xla(X, idx, val)
+    return _margins_dense_pallas(X, idx, val, block_b=cfg["block_b"],
+                                 block_a=cfg["block_a"])
+
+
 @functools.partial(jax.jit, static_argnames=("n_requests",))
+def _margins_csc_pallas(col_rows: Array, col_vals: Array, idx: Array,
+                        val: Array, n_requests: int) -> Array:
+    return serve_margins_csc_kernel(col_rows, col_vals, idx, val,
+                                    n_requests=n_requests,
+                                    interpret=interpret_mode())
+
+
+_margins_csc_xla = jax.jit(ref.serve_margins_csc_ref,
+                           static_argnames=("n_requests",))
+
+
 def serve_margins_csc(col_rows: Array, col_vals: Array, idx: Array,
-                      val: Array, n_requests: int) -> Array:
+                      val: Array, n_requests: int,
+                      impl: str | None = None) -> Array:
     """Serving margins over a padded-CSC request batch.
 
     col_rows/col_vals (n, k_max) feature-major request layout (sentinel
     row id == n_requests), idx/val (K, A) -> (n_requests, K) float32.
     No padding needed: the grid is over models and the scatter output is
-    already request-shaped.
+    already request-shaped. col_vals/val may be bf16 storage.
     """
-    return serve_margins_csc_kernel(col_rows, col_vals, idx, val,
-                                    n_requests=n_requests,
-                                    interpret=interpret_mode())
+    n, k_max = col_rows.shape
+    K, A = idx.shape
+    cfg = autotune.resolve(
+        "serve_margins_csc",
+        autotune.shape_bucket(n=n, kmax=k_max, k=K, a=A, b=n_requests),
+        val.dtype, {"impl": impl})
+    if cfg["impl"] == "xla":
+        return _margins_csc_xla(col_rows, col_vals, idx, val,
+                                n_requests=n_requests)
+    return _margins_csc_pallas(col_rows, col_vals, idx, val,
+                               n_requests=n_requests)
 
 
 # ---------------------------------------------------------------------------

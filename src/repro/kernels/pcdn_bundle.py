@@ -13,17 +13,32 @@ bundle's row support (DESIGN.md section 11), the kernel:
        Armijo decrement Delta,
     4. scatter-adds the support-compressed margin delta
        delta_R = (X_B d_B)[support],
-    5. evaluates ALL Q Armijo candidates on the (Q, r_max) support grid
-       (loss + l1 + optional elastic-net parts) and selects the first
-       satisfying alpha,
-    6. emits the scatter update VALUES alpha * d (for w at the bundle
-       indices) and alpha * delta_R (for z at the support rows).
+    5. evaluates the Q Armijo candidates on the (Q, r_max) support grid
+       (loss + l1 + optional elastic-net parts).
 
 Every intermediate between the slab read and the update emission stays
 in VMEM — no HBM round trip of a (P,)-direction or an (s,) margin delta
 between launches, which is the section 3.1 "minimize data transfer and
 synchronization" argument applied to the whole bundle step. Total work
 is O(P * k_max * Q): independent of the sample count s.
+
+The candidate axis is TILEABLE (`block_q`, DESIGN.md section 12): with
+grid=(Q_tiles,), each program recomputes the cheap deterministic steps
+1-4 (O(P * k_max), bitwise identical across programs — the d / delta /
+Delta output blocks have constant index maps and every program writes
+the same values) and evaluates only its (block_q, r_max) slice of the
+candidate grid, capping the largest VMEM intermediate at
+block_q * r_max instead of Q * r_max. The first-satisfying-alpha
+selection (previous in-kernel step 5b) now runs as a tiny XLA epilogue
+over the (Q,) f_deltas — the same math on the same f32 values, so the
+accepted alpha is unchanged for every block_q including the
+single-program default (block_q=None reproduces the old launch
+exactly).
+
+Slab values may arrive in bf16 storage (mixed-precision mode): they are
+upcast to f32 INSIDE the kernel, so all reductions and the candidate
+grid accumulate in f32 while the HBM->VMEM slab transfer moves half the
+bytes.
 
 The support gather itself (z_R = z[support], y_R = y[support]) runs as
 an XLA gather feeding the launch: a VMEM-resident (s,) operand with a
@@ -33,10 +48,7 @@ eliminate. Moving that gather in-kernel needs scalar-prefetched DMA
 from HBM (PrefetchScalarGridSpec) and is the documented follow-up.
 
 Scalars: `c` is TRACED (SMEM input) so one compiled step serves a whole
-regularization-path sweep; l2/sigma/gamma/loss kind are static. Single
-program (grid=(1,)): P, k_max, Q and r_max = P * k_max are all VMEM
-scale at solver bundle sizes (the (Q, r_max) grid is the largest
-intermediate; the `ops.pcdn_bundle` wrapper documents the cap).
+regularization-path sweep; l2/sigma/gamma/loss kind are static.
 """
 from __future__ import annotations
 
@@ -85,8 +97,8 @@ def _d2phi(kind: str, z, y):
 
 
 def _kernel(vals_ref, pos_ref, zR_ref, yR_ref, w_ref, alphas_ref, c_ref,
-            updw_ref, updz_ref, alpha_ref, q_ref, *,
-            kind: str, l2: float, sigma: float, gamma: float):
+            d_ref, delta_ref, Delta_ref, fd_ref, *,
+            kind: str, l2: float, gamma: float):
     z = zR_ref[0, :]                       # (R,) support margins
     yv = yR_ref[0, :]                      # (R,)
     c = c_ref[0, 0]
@@ -94,9 +106,10 @@ def _kernel(vals_ref, pos_ref, zR_ref, yR_ref, w_ref, alphas_ref, c_ref,
     u = c * _dphi(kind, z, yv)
     v = c * _d2phi(kind, z, yv)
     # step 2: slab reductions through the support positions (in-bounds by
-    # construction; padding entries carry value 0)
+    # construction; padding entries carry value 0). bf16 storage upcasts
+    # here — every reduction below accumulates in f32.
     pos = pos_ref[...]                     # (P, K) int32
-    vals = vals_ref[...]                   # (P, K) f32
+    vals = vals_ref[...].astype(jnp.float32)
     ug = jnp.take(u, pos)
     vg = jnp.take(v, pos)
     w = w_ref[0, :]                        # (P,)
@@ -109,73 +122,89 @@ def _kernel(vals_ref, pos_ref, zR_ref, yR_ref, w_ref, alphas_ref, c_ref,
              jnp.sum(jnp.abs(w + d)) - jnp.sum(jnp.abs(w)))
     # step 4: support-compressed margin delta (scatter within VMEM)
     delta = jnp.zeros_like(z).at[pos].add(vals * d[:, None])
-    # step 5: all Q Armijo candidates on the (Q, R) support grid
-    alphas = alphas_ref[...]               # (Q, 1)
+    # step 5: this program's tile of Armijo candidates on the
+    # (block_q, R) support grid
+    alphas = alphas_ref[...]               # (BQ, 1)
     zq = z[None, :] + alphas * delta[None, :]
     lo = c * jnp.sum(_phi(kind, zq, yv[None, :]) -
-                     _phi(kind, z, yv)[None, :], axis=1)      # (Q,)
+                     _phi(kind, z, yv)[None, :], axis=1)      # (BQ,)
     wq = w[None, :] + alphas * d[None, :]
     f_deltas = lo + jnp.sum(jnp.abs(wq), axis=1) - jnp.sum(jnp.abs(w))
     if l2:
         f_deltas = f_deltas + 0.5 * l2 * (jnp.sum(jnp.square(wq), axis=1) -
                                           jnp.sum(jnp.square(w)))
-    a = alphas[:, 0]
-    ok = f_deltas <= sigma * a * Delta
-    first = jnp.argmax(ok)                 # first True (lowest index)
-    alpha = jnp.where(jnp.any(ok), a[first], 0.0)
-    # step 6: emit the scatter update values + the accepted step
-    updw_ref[0, :] = alpha * d
-    updz_ref[0, :] = alpha * delta
-    alpha_ref[0, 0] = alpha
-    q_ref[0, 0] = (first + 1).astype(jnp.int32)
+    # deterministic recompute: every program writes the same d/delta/Delta
+    # into the constant-index-map blocks; fd is the per-tile output
+    d_ref[0, :] = d
+    delta_ref[0, :] = delta
+    Delta_ref[0, 0] = Delta
+    fd_ref[:, 0] = f_deltas
 
 
 def pcdn_bundle_kernel(
     vals: Array, pos: Array, z_R: Array, y_R: Array, w_B: Array,
     alphas: Array, c: Array,
     kind: str = "logistic", l2: float = 0.0, sigma: float = 0.01,
-    gamma: float = 0.0, interpret: bool = True,
+    gamma: float = 0.0, block_q: int | None = None, interpret: bool = True,
 ):
     """Raw launch. vals/pos (P, K); z_R/y_R (R,); w_B (P,); alphas (Q,);
-    c a scalar (may be traced). Returns (upd_w (P,), upd_z (R,),
-    alpha scalar, n_steps int32 scalar) — upd_* already scaled by the
-    accepted alpha."""
+    c a scalar (may be traced). vals may be bf16 (in-kernel upcast).
+    block_q=None runs the whole candidate grid in one program (the
+    pre-autotuner behavior); block_q=b tiles it into ceil(Q/b) programs.
+    Returns (upd_w (P,), upd_z (R,), alpha scalar, n_steps int32 scalar)
+    — upd_* already scaled by the accepted alpha."""
     P, K = vals.shape
     R = z_R.shape[0]
     Q = alphas.shape[0]
+    bq = Q if block_q is None else max(1, min(int(block_q), Q))
+    n_q = -(-Q // bq)
+    Qp = n_q * bq
+    alphas_f = alphas.astype(jnp.float32)
+    # alpha = 0 padding candidates give f_delta = 0; sliced away before
+    # the selection epilogue, so they can never be picked
+    alphas_p = jnp.pad(alphas_f, (0, Qp - Q))
     kernel = functools.partial(_kernel, kind=kind, l2=float(l2),
-                               sigma=float(sigma), gamma=float(gamma))
+                               gamma=float(gamma))
     out_shape = [
-        jax.ShapeDtypeStruct((1, P), jnp.float32),
-        jax.ShapeDtypeStruct((1, R), jnp.float32),
-        jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        jax.ShapeDtypeStruct((1, P), jnp.float32),     # d
+        jax.ShapeDtypeStruct((1, R), jnp.float32),     # delta
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),     # Delta
+        jax.ShapeDtypeStruct((Qp, 1), jnp.float32),    # f_deltas
     ]
-    upd_w, upd_z, alpha, q = pl.pallas_call(
+    d, delta, Delta, fd = pl.pallas_call(
         kernel,
-        grid=(1,),
+        grid=(n_q,),
         in_specs=[
             pl.BlockSpec((P, K), lambda i: (0, 0)),        # vals
             pl.BlockSpec((P, K), lambda i: (0, 0)),        # pos
             pl.BlockSpec((1, R), lambda i: (0, 0)),        # z_R
             pl.BlockSpec((1, R), lambda i: (0, 0)),        # y_R
             pl.BlockSpec((1, P), lambda i: (0, 0)),        # w_B
-            pl.BlockSpec((Q, 1), lambda i: (0, 0)),        # alphas
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),       # alpha tile
             pl.BlockSpec(memory_space=pltpu.SMEM),         # c (traced)
         ],
         out_specs=[
             pl.BlockSpec((1, P), lambda i: (0, 0)),
             pl.BlockSpec((1, R), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
         ],
         out_shape=out_shape,
         interpret=interpret,
-    )(vals.astype(jnp.float32), pos,
+    )(vals, pos,
       z_R.reshape(1, R).astype(jnp.float32),
       y_R.reshape(1, R).astype(jnp.float32),
       w_B.reshape(1, P).astype(jnp.float32),
-      alphas.reshape(Q, 1).astype(jnp.float32),
+      alphas_p.reshape(Qp, 1),
       jnp.asarray(c, jnp.float32).reshape(1, 1))
-    return (upd_w.reshape(P), upd_z.reshape(R),
-            alpha.reshape(()), q.reshape(()))
+    # selection epilogue (the previous in-kernel step 5b, same f32 math):
+    # first candidate with f_delta <= sigma * alpha * Delta
+    d = d.reshape(P)
+    delta = delta.reshape(R)
+    Delta = Delta.reshape(())
+    f_deltas = fd.reshape(Qp)[:Q]
+    ok = f_deltas <= sigma * alphas_f * Delta
+    first = jnp.argmax(ok)
+    alpha = jnp.where(jnp.any(ok), alphas_f[first], 0.0)
+    return (alpha * d, alpha * delta, alpha,
+            jnp.asarray(first + 1, jnp.int32))

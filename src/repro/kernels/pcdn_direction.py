@@ -41,7 +41,8 @@ def _kernel(xb_ref, u_ref, v_ref, w_ref, l2_ref,
         acc_g[...] = jnp.zeros_like(acc_g)
         acc_h[...] = jnp.zeros_like(acc_h)
 
-    xb = xb_ref[...]                      # (BS, BP)
+    # bf16 storage upcasts here; both reductions accumulate in f32
+    xb = xb_ref[...].astype(jnp.float32)  # (BS, BP)
     u = u_ref[...]                        # (1, BS)
     v = v_ref[...]                        # (1, BS)
     # (1, BS) @ (BS, BP) -> (1, BP): MXU-shaped reductions over samples.
@@ -107,5 +108,5 @@ def pcdn_direction_kernel(
         ],
         out_shape=out_shape,
         interpret=interpret,
-    )(XB.astype(jnp.float32), u2, v2, w2, l2a)
+    )(XB, u2, v2, w2, l2a)
     return d.reshape(P), g.reshape(P), h.reshape(P)

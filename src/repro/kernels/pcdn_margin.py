@@ -12,9 +12,14 @@ Dense request layout  — X (B, n) row-major request slab:
 
     z[b, k] = sum_a val[k, a] * X[b, idx[k, a]]
 
-  Grid (K, B_tiles): each program owns one model's (idx, val) pair and a
-  (block_b, n) request tile; the gather X[:, idx] and the (BB, A) x (A,)
-  contraction run out of VMEM, writing one (block_b, 1) column of z.
+  Grid (K, B_tiles, A_tiles): each program owns one model's (idx, val)
+  tile and a (block_b, n) request tile; the gather X[:, idx] and the
+  (BB, BA) x (BA,) contraction run out of VMEM, accumulating into a
+  resident (block_b, 1) column of z (constant index map along the a
+  axis, the fastest grid axis: zero-init at a == 0, partial dot per
+  tile). block_a=None keeps the original whole-active-width single
+  tile; tiling caps the gather window for wide models (DESIGN.md
+  section 12).
 
 Padded-CSC request layout — the repo's feature-major sparse layout
 (col_rows/col_vals of the REQUEST matrix, sentinel row id == B):
@@ -26,6 +31,10 @@ Padded-CSC request layout — the repo's feature-major sparse layout
   vector — the exact serving-side mirror of the solver's
   ``slab_matvec`` bundle update. Work is O(A * k_max) per model,
   independent of both B density and n.
+
+Model values and request slabs may arrive in bf16 storage
+(mixed-precision serve banks): both kernels upcast INSIDE the kernel,
+so every contraction accumulates in f32.
 
 Sentinel handling matches the direction kernels: model padding slots
 (idx == n) gather out of bounds and fill 0 (dense) or scatter out of
@@ -46,48 +55,64 @@ Array = jax.Array
 DEFAULT_BLOCK_B = 128
 
 
-def _dense_kernel(x_ref, idx_ref, val_ref, z_ref):
-    idx = idx_ref[0, :]                    # (A,) int32, sentinel == n
-    val = val_ref[0, :]                    # (A,)
-    x = x_ref[...]                         # (BB, n) request tile
+def _dense_kernel(x_ref, idx_ref, val_ref, z_ref, *, n_a: int):
+    a = pl.program_id(2)
+    idx = idx_ref[0, :]                    # (BA,) int32, sentinel == n
+    val = val_ref[0, :].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)     # (BB, n) request tile
     # OOB sentinel columns fill 0 -> padding contributes nothing
     xg = jnp.take(x, idx, axis=1, mode="fill", fill_value=0.0)
-    z_ref[:, 0] = jnp.dot(xg, val, preferred_element_type=jnp.float32)
+    part = jnp.dot(xg, val, preferred_element_type=jnp.float32)
+
+    @pl.when(a == 0)
+    def _init():
+        z_ref[:, 0] = jnp.zeros_like(part)
+
+    z_ref[:, 0] += part
 
 
 def serve_margins_dense_kernel(X: Array, idx: Array, val: Array,
                                block_b: int = DEFAULT_BLOCK_B,
+                               block_a: int | None = None,
                                interpret: bool = True) -> Array:
-    """Raw launch. X (B, n) f32 with B % block_b == 0, idx/val (K, A).
+    """Raw launch. X (B, n) with B % block_b == 0, idx/val (K, A).
+    block_a=None contracts each model's whole active width in one tile;
+    block_a=b tiles it (A padded with sentinel idx / zero val here).
     Returns margins (B, K) float32."""
     B, n = X.shape
     K, A = idx.shape
     assert B % block_b == 0, (B, block_b)
+    ba = A if block_a is None else max(1, min(int(block_a), A))
+    n_a = -(-A // ba)
+    Ap = n_a * ba
+    if Ap != A:
+        idx = jnp.pad(idx, ((0, 0), (0, Ap - A)), constant_values=n)
+        val = jnp.pad(val, ((0, 0), (0, Ap - A)))
     z = pl.pallas_call(
-        _dense_kernel,
-        grid=(K, B // block_b),
+        functools.partial(_dense_kernel, n_a=n_a),
+        grid=(K, B // block_b, n_a),
         in_specs=[
-            pl.BlockSpec((block_b, n), lambda k, j: (j, 0)),   # X tile
-            pl.BlockSpec((1, A), lambda k, j: (k, 0)),         # idx
-            pl.BlockSpec((1, A), lambda k, j: (k, 0)),         # val
+            pl.BlockSpec((block_b, n), lambda k, j, a: (j, 0)),   # X tile
+            pl.BlockSpec((1, ba), lambda k, j, a: (k, a)),        # idx
+            pl.BlockSpec((1, ba), lambda k, j, a: (k, a)),        # val
         ],
-        out_specs=pl.BlockSpec((block_b, 1), lambda k, j: (j, k)),
+        out_specs=pl.BlockSpec((block_b, 1), lambda k, j, a: (j, k)),
         out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
         interpret=interpret,
-    )(X.astype(jnp.float32), idx, val.astype(jnp.float32))
+    )(X, idx, val)
     return z
 
 
 def _csc_kernel(rows_ref, vals_ref, idx_ref, val_ref, z_ref, *,
                 n_requests: int):
     idx = idx_ref[0, :]                    # (A,) sentinel == n
-    val = val_ref[0, :]
+    val = val_ref[0, :].astype(jnp.float32)
     # gather the model's active request-matrix columns; sentinel models
     # fill row id == n_requests (dropped by the scatter) and value 0
     rows = jnp.take(rows_ref[...], idx, axis=0, mode="fill",
                     fill_value=n_requests)                     # (A, k_max)
-    vals = jnp.take(vals_ref[...], idx, axis=0, mode="fill",
-                    fill_value=0.0)                            # (A, k_max)
+    vals = jnp.take(vals_ref[...].astype(jnp.float32), idx, axis=0,
+                    mode="fill", fill_value=0.0)               # (A, k_max)
     contrib = vals * val[:, None]
     z = jnp.zeros((n_requests,), jnp.float32)
     z_ref[0, :] = z.at[rows].add(contrib, mode="drop")
@@ -117,6 +142,5 @@ def serve_margins_csc_kernel(col_rows: Array, col_vals: Array, idx: Array,
         out_specs=pl.BlockSpec((1, n_requests), lambda k: (k, 0)),
         out_shape=jax.ShapeDtypeStruct((K, n_requests), jnp.float32),
         interpret=interpret,
-    )(col_rows, col_vals.astype(jnp.float32), idx,
-      val.astype(jnp.float32))
+    )(col_rows, col_vals, idx, val)
     return z.T

@@ -20,6 +20,43 @@ from repro.data import load_libsvm, paper_like
 from repro.engine import LocalBackend, ShardedBackend, ShardedPCDNConfig
 from repro.launch.mesh import make_host_mesh
 
+# --dtype values -> storage dtype of the design values / serve bank
+# (solver state stays f32 either way — DESIGN.md section 12)
+DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+DTYPE_NAMES = {"fp32": "float32", "bf16": "bfloat16"}
+
+# the studied bf16 equivalence envelope (the BENCH_kernels.json
+# trajectory study, DESIGN.md section 12): losses it covers and the
+# tightest stopping tolerance the measured objective rel-diff supports
+BF16_LOSSES = ("logistic", "squared_hinge")
+BF16_MIN_TOL = 1e-3
+
+
+def check_dtype_envelope(args, ap: argparse.ArgumentParser,
+                         loss: str | None = None):
+    """Refuse bf16 outside the studied equivalence envelope.
+
+    The bf16-vs-fp32 trajectory study (BENCH_kernels.json, DESIGN.md
+    section 12) covers the LOCAL backend with the logistic and
+    squared-hinge losses down to a max objective rel-diff of ~1e-3 at
+    matched iteration counts; anything beyond that is unvalidated, so
+    the CLI rejects it instead of silently returning drifted solutions.
+    """
+    if getattr(args, "dtype", "fp32") != "bf16":
+        return
+    if getattr(args, "backend", "local") == "sharded":
+        ap.error("--dtype bf16 is unstudied on --backend sharded "
+                 "(the equivalence study covers the local backend only); "
+                 "use --dtype fp32 or --backend local")
+    if loss is not None and loss not in BF16_LOSSES:
+        ap.error(f"--dtype bf16 is unstudied for loss {loss!r} "
+                 f"(studied envelope: {', '.join(BF16_LOSSES)})")
+    tol = getattr(args, "tol", None)
+    if tol is not None and tol < BF16_MIN_TOL:
+        ap.error(f"--tol {tol:g} is tighter than the bf16 equivalence "
+                 f"envelope (max objective rel-diff ~{BF16_MIN_TOL:g}); "
+                 f"use --tol >= {BF16_MIN_TOL:g} or --dtype fp32")
+
 
 def add_backend_args(ap: argparse.ArgumentParser):
     """Execution-backend selection, identical in both CLIs."""
@@ -39,6 +76,13 @@ def add_backend_args(ap: argparse.ArgumentParser):
     ap.add_argument("--use-kernels", action="store_true",
                     help="route bundle math through the fused Pallas "
                          "direction kernels (both backends)")
+    ap.add_argument("--dtype", default="fp32", choices=["fp32", "bf16"],
+                    help="storage dtype of the design values (DESIGN.md "
+                         "section 12): bf16 halves design memory/HBM "
+                         "traffic with f32 accumulation everywhere; "
+                         "gated to the studied equivalence envelope "
+                         "(local backend, logistic/squared_hinge, "
+                         "--tol >= 1e-3)")
 
 
 def add_solver_args(ap: argparse.ArgumentParser):
@@ -93,7 +137,8 @@ def build_pcdn_config(args, **overrides) -> PCDNConfig:
     kw = dict(P=args.P, max_outer=args.max_outer, tol_kkt=args.tol,
               seed=args.seed, shrink=args.shrink,
               use_kernels=args.use_kernels,
-              ls_scope=getattr(args, "ls_scope", "auto"))
+              ls_scope=getattr(args, "ls_scope", "auto"),
+              dtype=DTYPE_NAMES[getattr(args, "dtype", "fp32")])
     kw.update(overrides)
     return PCDNConfig(**kw)
 
@@ -119,7 +164,8 @@ def make_backend(args, X, y, c: float, loss: str, outer=None):
         mesh = make_host_mesh(args.data_parallel, args.model_parallel)
         cfg = build_sharded_config(args, c, loss)
         return ShardedBackend(X, y, mesh, cfg, layout=args.layout), None
-    prob = make_problem(X, y, c=c, loss=loss, layout=args.layout)
+    prob = make_problem(X, y, c=c, loss=loss, layout=args.layout,
+                        dtype=DTYPES[getattr(args, "dtype", "fp32")])
     return LocalBackend(prob, build_pcdn_config(args), outer=outer), prob
 
 

@@ -80,6 +80,7 @@ def main(argv=None):
     if args.mode == "batch" and args.backend == "sharded":
         ap.error("--mode batch is local-only (the vmapped batch solver "
                  "has no sharded execution backend yet)")
+    common.check_dtype_envelope(args, ap, loss=args.loss)
 
     X, y, Xval, yval = _load(args)
     solver = common.build_pcdn_config(args)
@@ -145,7 +146,7 @@ def main(argv=None):
                 solver="pcdn", dataset=args.dataset, backend=args.backend,
                 mode=args.mode, P=args.P, tol_kkt=args.tol, seed=args.seed,
                 shrink=bool(args.shrink), loss=args.loss,
-                best_index=res.best_index))
+                dtype=args.dtype, best_index=res.best_index))
         art.save_model(args.save_model, family)
         print(f"[path] wrote model family ({len(family)} points) to "
               f"{args.save_model}")

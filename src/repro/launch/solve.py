@@ -55,6 +55,9 @@ def main(argv=None):
         ap.error("--shrink requires --solver pcdn or cdn")
     if args.backend == "sharded" and args.solver != "pcdn":
         ap.error("--backend sharded supports --solver pcdn only")
+    if args.dtype == "bf16" and args.solver not in ("pcdn", "cdn"):
+        ap.error("--dtype bf16 is studied for --solver pcdn/cdn only")
+    common.check_dtype_envelope(args, ap, loss=args.loss)
 
     X, y, Xte, yte, spec = common.load_dataset(args, with_test=True)
     if spec is not None:
@@ -81,7 +84,8 @@ def main(argv=None):
                    for k_, v in res.history._asdict().items()}
     else:
         prob = make_problem(X, y, c=c, loss=args.loss,
-                            layout=args.layout)
+                            layout=args.layout,
+                            dtype=common.DTYPES[args.dtype])
         w0 = (common.load_warm_start(args.warm_start, prob.n_features,
                                      prob.dtype)
               if args.warm_start else None)
@@ -124,7 +128,8 @@ def main(argv=None):
             provenance=art.solver_provenance(
                 solver=args.solver, dataset=args.dataset, backend=args.backend,
                 P=args.P, tol_kkt=args.tol, seed=args.seed,
-                shrink=bool(args.shrink), loss=args.loss))
+                shrink=bool(args.shrink), loss=args.loss,
+                dtype=args.dtype))
         if args.save_model:
             art.save_model(args.save_model, family)
         if args.out:

@@ -49,12 +49,18 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class ModelBank:
-    """Stacked sparse layouts of K models sharing n_features."""
+    """Stacked sparse layouts of K models sharing n_features.
+
+    `dtype` at build time sets the STORAGE dtype of val/union_val
+    (f32 default; bf16 halves bank memory and scorer HBM traffic —
+    DESIGN.md section 12). Every scorer upcasts to f32 before its
+    contraction, so margins are always f32.
+    """
 
     idx: Array                     # (K, A_max) int32, sentinel == n_features
-    val: Array                     # (K, A_max) float32, 0 at padding
+    val: Array                     # (K, A_max) float, 0 at padding
     union_idx: Array               # (U,) int32 union of active ids
-    union_val: Array               # (K, U) float32 weights on the union
+    union_val: Array               # (K, U) float weights on the union
     bias: Array                    # (K,) float32
     n_features: int
     kind: str = "binary"
@@ -79,7 +85,7 @@ class ModelBank:
 
     @classmethod
     def _build(cls, sparse_rows, bias, n: int, kind: str, loss_name: str,
-               classes) -> "ModelBank":
+               classes, dtype=np.float32) -> "ModelBank":
         """sparse_rows: [(indices, values)] per model -> both layouts."""
         K = len(sparse_rows)
         a_max = max(1, max(ii.shape[0] for ii, _ in sparse_rows))
@@ -97,31 +103,36 @@ class ModelBank:
             uval[k, np.searchsorted(union, ii)] = vv
         b = np.zeros((K,), np.float32) if bias is None \
             else np.asarray(bias, np.float32).reshape(K)
-        return cls(idx=jnp.asarray(idx), val=jnp.asarray(val),
+        dtype = jnp.dtype(dtype)
+        return cls(idx=jnp.asarray(idx), val=jnp.asarray(val, dtype=dtype),
                    union_idx=jnp.asarray(union.astype(np.int32)),
-                   union_val=jnp.asarray(uval), bias=jnp.asarray(b),
+                   union_val=jnp.asarray(uval, dtype=dtype),
+                   bias=jnp.asarray(b),
                    n_features=n, kind=kind, loss_name=loss_name,
                    classes=classes)
 
     @classmethod
-    def from_family(cls, family: ModelFamily) -> "ModelBank":
+    def from_family(cls, family: ModelFamily,
+                    dtype=np.float32) -> "ModelBank":
         rows = [(m.w_indices, m.w_values.astype(np.float32))
                 for m in family.models]
         bias = np.asarray([m.bias for m in family.models], np.float32)
         return cls._build(rows, bias, family.n_features, family.kind,
-                          family.loss_name, family.classes)
+                          family.loss_name, family.classes, dtype=dtype)
 
     @classmethod
     def from_dense(cls, W, bias=None, kind: str = "binary",
                    loss_name: str = "logistic",
-                   classes: Optional[np.ndarray] = None) -> "ModelBank":
+                   classes: Optional[np.ndarray] = None,
+                   dtype=np.float32) -> "ModelBank":
         """Stack (K, n) dense solutions (e.g. OVRResult.weights)."""
         W = np.asarray(W, np.float32)
         if W.ndim == 1:
             W = W[None, :]
         rows = [(np.flatnonzero(W[k]), W[k, np.flatnonzero(W[k])])
                 for k in range(W.shape[0])]
-        return cls._build(rows, bias, W.shape[1], kind, loss_name, classes)
+        return cls._build(rows, bias, W.shape[1], kind, loss_name, classes,
+                          dtype=dtype)
 
 
 @jax.jit
@@ -129,7 +140,8 @@ def _dense_xla(X, union_idx, union_val, bias):
     """One shared active-union gather, then a small (B, U) x (U, K)
     contraction — the gather cost is paid once for all K models."""
     Xu = jnp.take(X, union_idx, axis=1)
-    return Xu @ union_val.T + bias[None, :]
+    # bf16 bank storage upcasts here: the contraction accumulates in f32
+    return Xu @ union_val.T.astype(jnp.float32) + bias[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
@@ -141,7 +153,8 @@ def _csc_xla(col_rows, col_vals, union_idx, union_val, bias, n_requests):
 
     def one(vk):                                          # (U,) weights
         z = jnp.zeros((n_requests,), jnp.float32)
-        return z.at[rows].add(vals * vk[:, None], mode="drop")
+        return z.at[rows].add(vals * vk[:, None].astype(jnp.float32),
+                              mode="drop")
 
     return jax.vmap(one)(union_val).T + bias[None, :]
 

@@ -8,10 +8,17 @@ requirements-dev.txt) we install a minimal stub BEFORE collection, so the
 modules import cleanly and every @given test reports SKIPPED instead of
 the whole module erroring out of collection.
 """
+import os
 import sys
 import types
 
 import pytest
+
+# Hermeticity: a user-level autotune cache could route the ops.* wrappers
+# to the XLA reference impl, turning every kernel-vs-oracle test vacuous.
+# Tests always run the default (Pallas) configs; autotune-specific tests
+# set REPRO_AUTOTUNE explicitly per-case via monkeypatch.
+os.environ.setdefault("REPRO_AUTOTUNE", "off")
 
 try:  # real hypothesis wins whenever it is installed
     import hypothesis  # noqa: F401

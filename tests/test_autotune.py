@@ -1,0 +1,318 @@
+"""Autotuner contract tests (kernels/autotune + the ops.py dispatch):
+cache round-trip, corrupt/stale-entry fallback, resolve precedence,
+REPRO_KERNELS_INTERPRET resolution, and the committed BENCH_kernels.json
+headline guard."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def tuned_env(tmp_path, monkeypatch):
+    """Autotuning ON against a private empty cache file."""
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE", "on")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    autotune.invalidate_cache()
+    yield cache
+    autotune.invalidate_cache()
+
+
+# -- bucketing / keys ---------------------------------------------------------
+
+
+def test_next_pow2():
+    assert [autotune.next_pow2(v) for v in (1, 2, 3, 5, 8, 1000)] == \
+        [1, 2, 4, 8, 8, 1024]
+
+
+def test_shape_bucket_is_order_insensitive():
+    assert autotune.shape_bucket(s=1000, p=37) == \
+        autotune.shape_bucket(p=33, s=513)
+
+
+def test_cache_key_distinguishes_dtype_and_backend():
+    b = autotune.shape_bucket(s=256)
+    k1 = autotune.cache_key("pcdn_direction", b, jnp.float32, "cpu")
+    k2 = autotune.cache_key("pcdn_direction", b, jnp.bfloat16, "cpu")
+    k3 = autotune.cache_key("pcdn_direction", b, jnp.float32, "tpu")
+    assert len({k1, k2, k3}) == 3
+
+
+# -- cache round-trip and fallback -------------------------------------------
+
+
+def test_cache_round_trip(tuned_env):
+    bucket = autotune.shape_bucket(s=512, p=128)
+    cfg = {"impl": "xla", "block_s": 256, "block_p": 64}
+    assert autotune.record("pcdn_direction", bucket, jnp.float32, cfg,
+                           us=10.0, default_us=20.0, backend="cpu")
+    assert tuned_env.exists()
+    got = autotune.lookup("pcdn_direction", bucket, jnp.float32,
+                          backend="cpu")
+    assert got == cfg
+    # a different bucket misses
+    assert autotune.lookup("pcdn_direction",
+                           autotune.shape_bucket(s=4096, p=128),
+                           jnp.float32, backend="cpu") is None
+
+
+def test_corrupt_cache_falls_back_to_defaults(tuned_env):
+    tuned_env.write_text("{ not json !!!")
+    autotune.invalidate_cache()
+    bucket = autotune.shape_bucket(s=512, p=128)
+    assert autotune.lookup("pcdn_direction", bucket, jnp.float32) is None
+    assert autotune.resolve("pcdn_direction", bucket, jnp.float32) == \
+        autotune.DEFAULTS["pcdn_direction"]
+
+
+def test_wrong_version_cache_ignored(tuned_env):
+    tuned_env.write_text(json.dumps({"version": 999, "entries": {
+        "anything": {"config": {"impl": "xla"}}}}))
+    autotune.invalidate_cache()
+    assert autotune.lookup("pcdn_direction",
+                           autotune.shape_bucket(s=512, p=128),
+                           jnp.float32) is None
+
+
+def test_stale_entry_falls_back_to_defaults(tuned_env):
+    """Configs written by an older search space (unknown keys, values no
+    longer candidates) must not crash — they resolve to the defaults."""
+    bucket = autotune.shape_bucket(s=512, p=128)
+    key = autotune.cache_key("pcdn_direction", bucket, jnp.float32, "cpu")
+    stale_key_cfg = {"impl": "xla", "block_retired_axis": 4}
+    stale_val_cfg = {"impl": "xla", "block_s": 999999}
+    payload = {"version": autotune.CACHE_VERSION,
+               "entries": {key: {"config": stale_key_cfg}}}
+    tuned_env.write_text(json.dumps(payload))
+    autotune.invalidate_cache()
+    assert autotune.lookup("pcdn_direction", bucket, jnp.float32,
+                           backend="cpu") is None
+    payload["entries"][key]["config"] = stale_val_cfg
+    tuned_env.write_text(json.dumps(payload))
+    autotune.invalidate_cache()
+    assert autotune.lookup("pcdn_direction", bucket, jnp.float32,
+                           backend="cpu") is None
+    assert autotune.resolve("pcdn_direction", bucket, jnp.float32) == \
+        autotune.DEFAULTS["pcdn_direction"]
+
+
+def test_autotune_off_ignores_cache(tuned_env, monkeypatch):
+    bucket = autotune.shape_bucket(s=512, p=128)
+    autotune.record("pcdn_direction", bucket, jnp.float32,
+                    {"impl": "xla", "block_s": 256, "block_p": 64},
+                    backend="cpu")
+    monkeypatch.setenv("REPRO_AUTOTUNE", "off")
+    assert autotune.lookup("pcdn_direction", bucket, jnp.float32,
+                           backend="cpu") is None
+
+
+def test_record_unwritable_path_returns_false(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       "/proc/definitely/not/writable/cache.json")
+    autotune.invalidate_cache()
+    ok = autotune.record("pcdn_direction",
+                         autotune.shape_bucket(s=512, p=128), jnp.float32,
+                         {"impl": "xla", "block_s": 256, "block_p": 64})
+    autotune.invalidate_cache()
+    assert ok is False
+
+
+# -- resolve precedence and dispatch ------------------------------------------
+
+
+def test_resolve_precedence(tuned_env):
+    """defaults <- cached winner <- non-None per-call overrides."""
+    bucket = autotune.shape_bucket(s=512, p=128)
+    base = autotune.resolve("pcdn_direction", bucket, jnp.float32)
+    assert base == autotune.DEFAULTS["pcdn_direction"]
+    autotune.record("pcdn_direction", bucket, jnp.float32,
+                    {"impl": "xla", "block_s": 256, "block_p": 64})
+    cached = autotune.resolve("pcdn_direction", bucket, jnp.float32)
+    assert cached["impl"] == "xla" and cached["block_s"] == 256
+    over = autotune.resolve("pcdn_direction", bucket, jnp.float32,
+                            {"impl": "pallas", "block_s": None,
+                             "block_p": 32})
+    assert over["impl"] == "pallas"       # explicit override wins
+    assert over["block_s"] == 256         # None override falls through
+    assert over["block_p"] == 32
+
+
+def test_cached_winner_changes_ops_dispatch(tuned_env, monkeypatch):
+    """A persisted impl=xla winner reroutes the public wrapper."""
+    s, P = 512, 128
+    XB = jnp.asarray(np.random.default_rng(0).standard_normal((s, P)),
+                     jnp.float32)
+    u = jnp.ones((s,))
+    v = jnp.ones((s,))
+    w = jnp.zeros((P,))
+    hits = []
+    real = ops._direction_xla
+    monkeypatch.setattr(ops, "_direction_xla",
+                        lambda *a, **k: (hits.append(1), real(*a, **k))[1])
+    ops.pcdn_direction(XB, u, v, w)
+    assert not hits                        # default routes to pallas
+    autotune.record("pcdn_direction", autotune.shape_bucket(s=s, p=P),
+                    jnp.float32,
+                    {"impl": "xla", "block_s": 512, "block_p": 128})
+    ops.pcdn_direction(XB, u, v, w)
+    assert hits                            # cached winner routes to xla
+
+
+# -- tune() strategies (deterministic fake timer) -----------------------------
+
+
+def _fake_cost(cfg):
+    """Deterministic synthetic cost surface with its optimum off-default:
+    xla beats pallas, bigger block_s is better."""
+    us = 100.0
+    if cfg["impl"] == "xla":
+        us -= 50.0
+    us -= (cfg.get("block_s") or 0) / 100.0
+    us -= (cfg.get("block_p") or 0) / 1000.0
+    return us
+
+
+@pytest.mark.parametrize("strategy", ["exhaustive", "hillclimb"])
+def test_tune_finds_winner_and_persists(tuned_env, monkeypatch, strategy):
+    monkeypatch.setattr(autotune, "time_call",
+                        lambda fn, repeats=5, warmup=1: fn())
+
+    def runner(cfg):
+        return lambda: _fake_cost(cfg)
+
+    bucket = autotune.shape_bucket(s=1024, p=128)
+    res = autotune.tune("pcdn_direction", runner, bucket, jnp.float32,
+                        strategy=strategy, backend="faketest")
+    # the surface is separable, so both strategies find the global
+    # optimum: xla, largest block_s, largest block_p
+    assert res.config == {"impl": "xla", "block_s": 1024, "block_p": 256}
+    assert res.us <= res.default_us        # never worse than default
+    assert res.speedup >= 1.0
+    assert res.trajectory[0]["config"] == \
+        autotune.DEFAULTS["pcdn_direction"]
+    # persisted winner is immediately visible to lookup
+    assert autotune.lookup("pcdn_direction", bucket, jnp.float32,
+                           backend="faketest") == res.config
+
+
+def test_tune_skips_infeasible_candidates(tuned_env, monkeypatch):
+    monkeypatch.setattr(autotune, "time_call",
+                        lambda fn, repeats=5, warmup=1: fn())
+
+    def runner(cfg):
+        if cfg["impl"] == "xla":
+            raise RuntimeError("infeasible on this backend")
+        return lambda: _fake_cost(cfg)
+
+    res = autotune.tune("pcdn_direction", runner,
+                        autotune.shape_bucket(s=1024, p=128), jnp.float32,
+                        persist=False)
+    assert res.config["impl"] == "pallas"
+
+
+# -- REPRO_KERNELS_INTERPRET resolution ---------------------------------------
+
+
+@pytest.fixture
+def interpret_reset(monkeypatch):
+    saved = ops.INTERPRET
+    yield monkeypatch
+    ops.INTERPRET = saved
+
+
+def test_interpret_auto_mode(interpret_reset):
+    """auto == compiled on TPU, interpreter everywhere else."""
+    interpret_reset.setenv("REPRO_KERNELS_INTERPRET", "auto")
+    ops.INTERPRET = None
+    assert ops.interpret_mode() is (jax.default_backend() != "tpu")
+
+
+def test_interpret_env_unset_behaves_as_auto(interpret_reset):
+    interpret_reset.delenv("REPRO_KERNELS_INTERPRET", raising=False)
+    ops.INTERPRET = None
+    assert ops.interpret_mode() is (jax.default_backend() != "tpu")
+
+
+@pytest.mark.parametrize("env,expect", [("1", True), ("true", True),
+                                        ("0", False), ("false", False),
+                                        ("off", False)])
+def test_interpret_env_forced(interpret_reset, env, expect):
+    interpret_reset.setenv("REPRO_KERNELS_INTERPRET", env)
+    ops.INTERPRET = None
+    assert ops.interpret_mode() is expect
+
+
+def test_interpret_legacy_assignment_short_circuits(interpret_reset):
+    """`ops.INTERPRET = x` (the pre-env API) overrides the env var."""
+    interpret_reset.setenv("REPRO_KERNELS_INTERPRET", "1")
+    ops.INTERPRET = False
+    assert ops.interpret_mode() is False
+    ops.INTERPRET = True
+    assert ops.interpret_mode() is True
+
+
+def test_backend_tag_reflects_interpret(interpret_reset):
+    ops.INTERPRET = True
+    assert autotune.backend_tag().endswith("-interp")
+    ops.INTERPRET = False
+    assert not autotune.backend_tag().endswith("-interp")
+
+
+# -- committed headline artifact guard ----------------------------------------
+
+
+def _load_headline():
+    path = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    if not os.path.exists(path):
+        pytest.skip("BENCH_kernels.json not committed yet")
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def test_bench_kernels_headline_tuned_never_worse():
+    """The committed artifact must report tuned <= default for EVERY
+    kernel x shape x dtype cell (the autotuner always measures the
+    default, so a regression here means the artifact is stale or the
+    tuner broke)."""
+    bench = _load_headline()
+    assert bench["cells"], "empty benchmark artifact"
+    for c in bench["cells"]:
+        assert c["tuned"]["us"] <= c["default"]["us"] * 1.001, \
+            f"{c['kernel']} {c['shape']} {c['dtype']}: tuned " \
+            f"{c['tuned']['us']}us > default {c['default']['us']}us"
+
+
+def test_bench_kernels_headline_speedup_floor():
+    """At least one cell shows the >= 1.3x tuned-over-default headline."""
+    bench = _load_headline()
+    best = max(c["speedup"] for c in bench["cells"])
+    assert best >= 1.3, f"best speedup {best:.2f} < 1.3"
+
+
+def test_bench_kernels_bf16_study_within_envelope():
+    """The committed bf16-vs-fp32 matched-iteration study must sit inside
+    the envelope the --dtype bf16 CLI gate promises (<= 1e-3)."""
+    bench = _load_headline()
+    study = bench.get("bf16_study")
+    if study is None:
+        pytest.skip("artifact carries no bf16 study")
+    assert study["max_objective_rel_diff"] <= study["envelope_rel_diff"]
+    assert study["pass"] is True
+
+
+def test_bench_kernels_roofline_terms_present():
+    bench = _load_headline()
+    for c in bench["cells"]:
+        r = c["roofline"]
+        assert r["bound"] in ("compute", "memory")
+        assert r["flops"] > 0 and r["bytes"] > 0
+        assert r["t_compute_us"] >= 0 and r["t_memory_us"] >= 0

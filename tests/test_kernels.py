@@ -129,6 +129,98 @@ def test_flash_attention_bf16():
                                rtol=5e-2, atol=5e-2)
 
 
+# -- tiled launch configs (the autotuner's search axes) -----------------------
+#
+# Every tileable axis the autotuner may pick must be oracle-exact: tiling
+# changes the launch decomposition, never the math.
+
+@pytest.mark.parametrize("block_q", [1, 4, 8, 24, 100])
+def test_pcdn_bundle_block_q_tiling(block_q):
+    P, k, r, q = 24, 8, 96, 24
+    rows = RNG.integers(0, r, size=(P, k))
+    vals = _arr((P, k))
+    pos = jnp.asarray(rows, jnp.int32)
+    z = _arr((r,))
+    y = jnp.sign(_arr((r,)))
+    w = 0.1 * _arr((P,))
+    alphas = jnp.asarray(0.5 ** np.arange(q), jnp.float32)
+    args = (vals, pos, z, y, w, alphas, 1.0)
+    uw1, uz1, a1, q1 = ops.pcdn_bundle(*args, block_q=block_q)
+    uw2, uz2, a2, q2 = ref.pcdn_bundle_ref(*args)
+    assert float(a1) == float(a2)
+    assert int(q1) == int(q2)
+    np.testing.assert_allclose(uw1, uw2, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(uz1, uz2, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("block_k", [4, 16, 64])
+@pytest.mark.parametrize("block_p", [8, 32])
+def test_pcdn_sparse_direction_block_k_tiling(block_k, block_p):
+    s, P, k = 300, 37, 9
+    rows = jnp.asarray(RNG.integers(0, s + 1, size=(P, k)), jnp.int32)
+    vals = _arr((P, k)) * (rows < s)
+    u = _arr((s,))
+    v = _arr((s,), positive=True)
+    w = _arr((P,))
+    d1, g1, h1 = ops.pcdn_sparse_direction(rows, vals, u, v, w,
+                                           block_p=block_p, block_k=block_k)
+    d2, g2, h2 = ref.pcdn_sparse_direction_ref(rows, vals, u, v, w)
+    np.testing.assert_allclose(g1, g2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h1, h2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(d1, d2, rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("block_s,block_p", [(64, 16), (1024, 256)])
+def test_pcdn_direction_block_tiling(block_s, block_p):
+    XB = _arr((500, 70))
+    u = _arr((500,))
+    v = _arr((500,), positive=True)
+    w = _arr((70,))
+    d1, g1, h1 = ops.pcdn_direction(XB, u, v, w, block_s=block_s,
+                                    block_p=block_p)
+    d2, g2, h2 = ref.pcdn_direction_ref(XB, u, v, w)
+    np.testing.assert_allclose(g1, g2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(d1, d2, rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("block_s", [64, 512, 8192])
+def test_pcdn_linesearch_block_tiling(block_s):
+    s = 1000
+    z = _arr((s,))
+    delta = _arr((s,))
+    y = jnp.sign(_arr((s,)))
+    alphas = jnp.asarray(0.5 ** np.arange(20), jnp.float32)
+    o1 = ops.pcdn_linesearch(z, delta, y, alphas, block_s=block_s)
+    o2 = ref.pcdn_linesearch_ref(z, delta, y, alphas)
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("block_a", [16, 64, 1024])
+@pytest.mark.parametrize("block_b", [8, 64])
+def test_serve_margins_dense_block_a_tiling(block_a, block_b):
+    B, n, K, A = 48, 256, 5, 96
+    X = _arr((B, n))
+    idx = jnp.asarray(np.stack([np.sort(RNG.permutation(n + 1)[:A])
+                                for _ in range(K)]), jnp.int32)
+    val = _arr((K, A)) * (idx < n)
+    z1 = ops.serve_margins_dense(X, idx, val, block_b=block_b,
+                                 block_a=block_a)
+    z2 = ref.serve_margins_dense_ref(X, idx, val)
+    np.testing.assert_allclose(z1, z2, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_impl_override_routes_both_ways(impl):
+    """The impl axis is caller-forceable and both routes agree."""
+    XB = _arr((128, 32))
+    u = _arr((128,))
+    v = _arr((128,), positive=True)
+    w = _arr((32,))
+    d1, g1, h1 = ops.pcdn_direction(XB, u, v, w, impl=impl)
+    d2, g2, h2 = ref.pcdn_direction_ref(XB, u, v, w)
+    np.testing.assert_allclose(d1, d2, rtol=2e-3, atol=2e-4)
+
+
 def test_flash_attention_grad_matches_ref():
     q = _arr((2, 128, 64))
     k = _arr((2, 128, 64))

@@ -1,0 +1,168 @@
+"""Mixed-precision contract tests (DESIGN.md section 12): bf16 STORAGE
+with f32 accumulation through the design matrix, the solver, the CLI
+envelope gate, and the serving bank."""
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PCDNConfig, make_problem, solve
+from repro.core.design_matrix import as_design
+from repro.launch import common
+from repro.serve.predict import ModelBank, margins_dense
+
+RNG = np.random.default_rng(7)
+
+
+def _data(s=160, n=48, density=0.3):
+    X = RNG.standard_normal((s, n)) * (RNG.random((s, n)) < density)
+    w_true = RNG.standard_normal(n) * (RNG.random(n) < 0.5)
+    y = np.sign(X @ w_true + 0.1 * RNG.standard_normal(s))
+    y[y == 0] = 1.0
+    return np.asarray(X, np.float32), np.asarray(y, np.float32)
+
+
+# -- design matrix storage vs accumulation ------------------------------------
+
+
+@pytest.mark.parametrize("layout", ["dense", "padded_csc"])
+def test_design_bf16_storage_f32_results(layout):
+    X, _ = _data()
+    d32 = as_design(X, layout=layout)
+    d16 = as_design(X, layout=layout, dtype=jnp.bfloat16)
+    assert d16.acc_dtype == jnp.float32
+    w = jnp.asarray(RNG.standard_normal(X.shape[1]), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal(X.shape[0]), jnp.float32)
+    z32, z16 = d32.matvec(w), d16.matvec(w)
+    assert z16.dtype == jnp.float32        # f32 accumulation, not bf16
+    # bf16 storage rounds each VALUE once (~2^-8 relative); the reduction
+    # itself stays f32, so the error is input-rounding-sized
+    scale = float(np.abs(np.asarray(z32)).max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(z16), np.asarray(z32),
+                               atol=2e-2 * scale)
+    g32 = d32.rmatvec(u)
+    g16 = d16.rmatvec(u)
+    assert g16.dtype == jnp.float32
+    scale = float(np.abs(np.asarray(g32)).max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(g16), np.asarray(g32),
+                               atol=2e-2 * scale)
+
+
+def test_problem_solve_dtype_pins_state_to_f32():
+    X, y = _data()
+    prob = make_problem(X, y, c=1.0, dtype=jnp.bfloat16)
+    assert prob.solve_dtype == jnp.float32
+    assert prob.y.dtype == jnp.float32
+
+
+# -- matched-iteration trajectory equivalence ---------------------------------
+
+
+@pytest.mark.parametrize("loss", ["logistic", "squared_hinge"])
+def test_bf16_trajectory_matches_fp32(loss):
+    """Same data, same config, tol_kkt=0 + fixed outer budget: iteration
+    k of the bf16 run must track iteration k of the fp32 run to <= 1e-3
+    relative objective — the envelope the --dtype bf16 gate promises."""
+    X, y = _data()
+    cfg = PCDNConfig(P=16, max_outer=10, tol_kkt=0.0, seed=0)
+    objs = {}
+    for name, dt in (("fp32", jnp.float32), ("bf16", jnp.bfloat16)):
+        prob = make_problem(X, y, c=1.0, loss=loss, dtype=dt)
+        res = solve(prob, cfg)
+        objs[name] = np.asarray(res.history.objective, np.float64)
+    n = min(len(objs["fp32"]), len(objs["bf16"]))
+    assert n == 10
+    rel = np.abs(objs["bf16"][:n] - objs["fp32"][:n]) / \
+        np.maximum(np.abs(objs["fp32"][:n]), 1e-12)
+    assert rel.max() <= 1e-3, f"max rel diff {rel.max():.2e}"
+
+
+# -- CLI envelope gate --------------------------------------------------------
+
+
+def _args(**kw):
+    ns = argparse.Namespace(dtype="bf16", backend="local", tol=1e-3)
+    for k, v in kw.items():
+        setattr(ns, k, v)
+    return ns
+
+
+def _ap():
+    return argparse.ArgumentParser()
+
+
+def test_envelope_fp32_never_refused():
+    common.check_dtype_envelope(_args(dtype="fp32", tol=1e-9,
+                                      backend="sharded"), _ap(),
+                                loss="squared")
+
+
+def test_envelope_accepts_studied_configuration():
+    common.check_dtype_envelope(_args(), _ap(), loss="logistic")
+    common.check_dtype_envelope(_args(tol=0.01), _ap(),
+                                loss="squared_hinge")
+
+
+def test_envelope_refuses_sharded_backend():
+    with pytest.raises(SystemExit):
+        common.check_dtype_envelope(_args(backend="sharded"), _ap(),
+                                    loss="logistic")
+
+
+def test_envelope_refuses_unstudied_loss():
+    with pytest.raises(SystemExit):
+        common.check_dtype_envelope(_args(), _ap(), loss="squared")
+
+
+def test_envelope_refuses_tight_tolerance():
+    with pytest.raises(SystemExit):
+        common.check_dtype_envelope(_args(tol=1e-5), _ap(),
+                                    loss="logistic")
+
+
+def test_solve_cli_refuses_bf16_outside_envelope():
+    from repro.launch import solve as solve_cli
+    with pytest.raises(SystemExit):
+        solve_cli.main(["--dataset", "a9a", "--dtype", "bf16",
+                        "--tol", "1e-6"])
+    with pytest.raises(SystemExit):
+        solve_cli.main(["--dataset", "a9a", "--dtype", "bf16",
+                        "--backend", "sharded"])
+    with pytest.raises(SystemExit):
+        solve_cli.main(["--dataset", "a9a", "--dtype", "bf16",
+                        "--solver", "tron"])
+
+
+def test_path_cli_refuses_bf16_outside_envelope():
+    from repro.launch import path as path_cli
+    with pytest.raises(SystemExit):
+        path_cli.main(["--dataset", "a9a", "--dtype", "bf16",
+                       "--tol", "1e-6"])
+
+
+def test_build_pcdn_config_records_dtype():
+    cfg = common.build_pcdn_config(
+        _args(P=32, max_outer=5, tol=1e-3, seed=0, shrink=False,
+              use_kernels=False, ls_scope="auto", dtype="bf16"))
+    assert cfg.dtype == "bfloat16"
+
+
+# -- serving bank -------------------------------------------------------------
+
+
+def test_bank_bf16_storage_f32_margins():
+    W = np.asarray(RNG.standard_normal((4, 64)) *
+                   (RNG.random((4, 64)) < 0.4), np.float32)
+    X = np.asarray(RNG.standard_normal((16, 64)), np.float32)
+    b32 = ModelBank.from_dense(W, kind="path")
+    b16 = ModelBank.from_dense(W, kind="path", dtype=jnp.bfloat16)
+    assert b16.val.dtype == jnp.bfloat16
+    assert b16.union_val.dtype == jnp.bfloat16
+    assert b16.idx.dtype == jnp.int32      # indices stay exact
+    for use_kernels in (False, True):
+        z32 = np.asarray(margins_dense(b32, X, use_kernels=use_kernels))
+        z16 = np.asarray(margins_dense(b16, X, use_kernels=use_kernels))
+        assert z16.dtype == np.float32
+        scale = np.abs(z32).max() + 1e-6
+        np.testing.assert_allclose(z16, z32, atol=2e-2 * scale)
