@@ -66,6 +66,13 @@ class PCDNConfig:
     shrink: bool = False         # mask near-optimal zero features out of bundles
     shrink_tol: float = 0.01     # shrink j when w_j == 0 and |g_j| < 1 - shrink_tol
     recheck_every: int = 1       # full-set KKT recheck period (un-shrinks violators)
+    # -- observability (DESIGN.md section 13.2) ------------------------------
+    # surface per-bundle line-search telemetry (backtrack depth q^t and
+    # accepted alpha) as a 10th outer output: (q (b,) int32, alpha (b,)).
+    # Off by default so the compiled iteration is byte-identical to the
+    # uninstrumented solver; the engine host loop folds the arrays into
+    # SolveHistory.bundle_q / bundle_alpha at its per-iteration sync.
+    record_aux: bool = False
 
 
 def cdn_config(**kw) -> PCDNConfig:
@@ -267,6 +274,11 @@ def make_path_outer(problem: L1Problem, cfg: PCDNConfig):
     the bundle loop covers the full feature set — the scan-based
     make_outer_iteration and this function then compute the same update
     (modulo the independent random partition draw).
+
+    With cfg.record_aux=True a 10th output `(q (b,), alpha (b,))` carries
+    the per-bundle backtrack depth and accepted step of this iteration
+    (DESIGN.md section 13.2). Under shrinking, slots past the dynamic
+    bundle count b_active hold sentinels q == -1 / alpha == nan.
     """
     n = problem.n_features
 
@@ -277,19 +289,35 @@ def make_path_outer(problem: L1Problem, cfg: PCDNConfig):
         key, sub = jax.random.split(key)
         if cfg.shrink:
             idxs, b_active = B.partition_active(sub, active, cfg.P)
+            if cfg.record_aux:
+                # preallocated sentinel slots: a bundle past the dynamic
+                # trip count b_active never runs and keeps q=-1/alpha=nan
+                b_max = idxs.shape[0]
+                aux0 = (jnp.full((b_max,), -1, jnp.int32),
+                        jnp.full((b_max,), jnp.nan, w.dtype))
+            else:
+                aux0 = ()
 
             def body(t, carry):
-                (w, z), q_sum = carry
-                (w, z), (q, _alpha) = step((w, z), idxs[t])
-                return (w, z), q_sum + q.astype(jnp.float32)
+                (w, z), q_sum, aux = carry
+                (w, z), (q, alpha) = step((w, z), idxs[t])
+                if cfg.record_aux:
+                    aux = (aux[0].at[t].set(q.astype(jnp.int32)),
+                           aux[1].at[t].set(alpha.astype(w.dtype)))
+                return (w, z), q_sum + q.astype(jnp.float32), aux
 
-            (w, z), q_sum = jax.lax.fori_loop(
-                0, b_active, body, ((w, z), jnp.float32(0.0)))
+            (w, z), q_sum, aux = jax.lax.fori_loop(
+                0, b_active, body, ((w, z), jnp.float32(0.0), aux0))
+            if cfg.record_aux:
+                qs, alphas = aux
             mean_q = q_sum / jnp.maximum(b_active, 1).astype(jnp.float32)
         else:
             idxs = B.partition(sub, n, cfg.P)
-            (w, z), (steps, _alphas) = jax.lax.scan(step, (w, z), idxs)
+            (w, z), (steps, alphas) = jax.lax.scan(step, (w, z), idxs)
             mean_q = jnp.mean(steps.astype(jnp.float32))
+            if cfg.record_aux:
+                qs = steps.astype(jnp.int32)
+                alphas = alphas.astype(w.dtype)
 
         f = prob.objective_from_margins(z, w)
         g = prob.full_grad(z, w)
@@ -301,7 +329,10 @@ def make_path_outer(problem: L1Problem, cfg: PCDNConfig):
             active = active | (recheck & (viol > cfg.tol_kkt))
         nnz = jnp.sum(w != 0)
         n_active = jnp.sum(active.astype(jnp.int32))
-        return w, z, key, f, kkt, nnz, mean_q, active, n_active
+        base = (w, z, key, f, kkt, nnz, mean_q, active, n_active)
+        if cfg.record_aux:
+            return base + ((qs, alphas),)
+        return base
 
     return jax.jit(outer)
 

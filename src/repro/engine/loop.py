@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 Array = jax.Array
 
 
@@ -63,6 +65,13 @@ class SolveHistory(NamedTuple):
     ls_steps: np.ndarray       # (K,) mean line-search steps per bundle
     wall_time: np.ndarray      # (K,) cumulative seconds
     n_active: np.ndarray       # (K,) un-shrunk features (== n without shrink)
+    # per-bundle series (DESIGN.md section 13.2): present only when the
+    # backend was built with record_aux=True — the outer iteration then
+    # returns a 10th output (q (b,), alpha (b,)) and these are (K, b)
+    # with sentinel q == -1 / alpha == nan on bundles that did not run
+    # (the shrinking solver's unused trailing slots).
+    bundle_q: Optional[np.ndarray] = None       # (K, b) int32
+    bundle_alpha: Optional[np.ndarray] = None   # (K, b)
 
 
 class SolveResult(NamedTuple):
@@ -116,42 +125,101 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
 
     divergence_guard(f) -> True aborts the loop and flags the result as
     diverged (SCDN's Hogwild semantics); converged stays False.
+
+    An outer returning a 10th output — per-bundle (q (b,), alpha (b,))
+    device arrays, the `record_aux` contract of DESIGN.md section 13.2
+    — gets them harvested into `SolveHistory.bundle_q/bundle_alpha`
+    (and, when the metrics registry is enabled, into the
+    solver.bundle_q / solver.bundle_alpha histograms) at the same host
+    sync that reads f/kkt. A 9-tuple outer records exactly the history
+    it always did.
     """
     w, z, key, active = state
     c_arr = jnp.asarray(c, w.dtype)
-    hist = {k: [] for k in SolveHistory._fields}
+    base_fields = ("outer_iter", "objective", "kkt", "nnz", "ls_steps",
+                   "wall_time", "n_active")
+    hist = {k: [] for k in base_fields}
+    aux_q: list = []
+    aux_alpha: list = []
     t0 = time.perf_counter()
     converged = diverged = False
     f = float("nan")
+    prev_active = None
     k = 0
     for k in range(max_outer):
         # iteration 0 always rechecks so a stale warm-started active set
         # (e.g. carried across path points) is repaired immediately.
         recheck = jnp.asarray(k == 0 or recheck_every <= 1
                               or k % recheck_every == 0)
-        w, z, key, f_, kkt, nnz, mean_q, active, n_active = outer(
-            w, z, key, active, recheck, c_arr)
+        t_iter = time.perf_counter_ns()
+        out = outer(w, z, key, active, recheck, c_arr)
+        w, z, key, f_, kkt, nnz, mean_q, active, n_active = out[:9]
+        aux = out[9] if len(out) > 9 else None
+        # sync BEFORE timestamping: float(f_) below only blocks on f_,
+        # and a backend dispatching asynchronously would otherwise get
+        # this iteration's device time attributed to a later row
+        # (tests/test_obs.py pins monotone per-iteration times that sum
+        # to ~ the loop total).
+        jax.block_until_ready((w, z, active))
+        t_now = time.perf_counter_ns()
         f = float(f_)
+        kkt_f = float(kkt)
+        n_active_i = int(n_active)
         hist["outer_iter"].append(k)
         hist["objective"].append(f)
-        hist["kkt"].append(float(kkt))
+        hist["kkt"].append(kkt_f)
         hist["nnz"].append(int(nnz))
         hist["ls_steps"].append(float(mean_q))
         hist["wall_time"].append(time.perf_counter() - t0)
-        hist["n_active"].append(int(n_active))
+        hist["n_active"].append(n_active_i)
+        if aux is not None:
+            q_np = np.asarray(aux[0])
+            a_np = np.asarray(aux[1])
+            aux_q.append(q_np)
+            aux_alpha.append(a_np)
+            if obs.metrics_enabled():
+                ran = q_np >= 0          # sentinel -1: bundle did not run
+                obs.observe_many("solver.bundle_q", q_np[ran],
+                                 bounds=obs.Q_BOUNDS)
+                obs.observe_many("solver.bundle_alpha", a_np[ran],
+                                 bounds=obs.ALPHA_BOUNDS)
+        if obs.metrics_enabled():
+            obs.inc("solver.outer_iters")
+            obs.observe("solver.iter_seconds", (t_now - t_iter) / 1e9)
+            obs.observe("solver.mean_q", float(mean_q), bounds=obs.Q_BOUNDS)
+            obs.set_gauge("solver.n_active", n_active_i)
+            obs.set_gauge("solver.kkt", kkt_f)
+            if prev_active is not None and n_active_i != prev_active:
+                if n_active_i < prev_active:
+                    obs.inc("solver.shrink_events",
+                            prev_active - n_active_i)
+                else:
+                    obs.inc("solver.unshrink_events",
+                            n_active_i - prev_active)
+        prev_active = n_active_i
+        obs.complete("engine.outer", "engine", t_iter, t_now,
+                     args={"k": k, "objective": f, "kkt": kkt_f,
+                           "mean_q": float(mean_q),
+                           "n_active": n_active_i})
         if callback is not None:
-            callback(k, w, f, float(kkt))
+            callback(k, w, f, kkt_f)
         if divergence_guard is not None and divergence_guard(f):
             diverged = True
+            obs.inc("solver.divergence_trips")
+            obs.instant("engine.divergence_guard", "engine",
+                        args={"k": k, "objective": f})
             break
-        if float(kkt) <= tol_kkt:
+        if kkt_f <= tol_kkt:
             converged = True
             break
         if f_star is not None and tol_rel_obj > 0:
             if (f - f_star) <= tol_rel_obj * abs(f_star):
                 converged = True
                 break
-    history = SolveHistory(**{k_: np.asarray(v) for k_, v in hist.items()})
+    history = SolveHistory(
+        **{k_: np.asarray(v) for k_, v in hist.items()},
+        bundle_q=np.asarray(aux_q) if aux_q else None,
+        bundle_alpha=np.asarray(aux_alpha) if aux_alpha else None)
     result = SolveResult(w=w, objective=f, n_outer=k + 1,
                          converged=converged, history=history,
                          diverged=diverged)

@@ -110,6 +110,12 @@ class ShardedPCDNConfig:
     shrink_tol: float = 0.01
     recheck_every: int = 1
     tol_kkt: float = 1e-3          # un-shrink threshold (keep == stop tol)
+    # -- observability (DESIGN.md section 13.2; same contract as
+    # PCDNConfig.record_aux): surface per-bundle (q, alpha) as a 10th
+    # outer output. Both are derived from all-axes psums (the phase-3
+    # Armijo vector), so they are replicated and leave the shard_map
+    # with P() out_specs — no extra collectives.
+    record_aux: bool = False
 
     @property
     def all_axes(self):
@@ -137,7 +143,10 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
     (w, z, key, f, kkt, nnz, mean_q, active, n_active) with identical
     collective schedules — only the shard-local bundle math differs.
     n_local = features per model shard (static). `c` and `recheck` are
-    traced scalars.
+    traced scalars. With cfg.record_aux a 10th output (q (b,), alpha
+    (b,)) carries the per-bundle line-search telemetry (DESIGN.md
+    section 13.2); under shrinking, slots past the pmax trip count hold
+    sentinels q == -1 / alpha == nan.
     """
     loss = get_loss(cfg.loss_name)
     gamma = cfg.armijo.gamma
@@ -300,7 +309,7 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
             res = select_first_satisfying(f_deltas, alphas, Delta, sigma)
             w_l = B.scatter_add(w_l, idx, res.alpha * d)
             z_l = z_l.at[support].add(res.alpha * delta_R, mode="drop")
-            return (w_l, z_l), res.n_steps
+            return (w_l, z_l), (res.n_steps, res.alpha)
 
         def bundle_step(carry, idx):
             w_l, z_l = carry
@@ -379,7 +388,7 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
                 n_steps = q
             w_l = B.scatter_add(w_l, idx, alpha * d)
             z_l = z_l + alpha * delta_z
-            return (w_l, z_l), n_steps
+            return (w_l, z_l), (n_steps, alpha)
 
         step_fn = bundle_step_support if use_support else bundle_step
 
@@ -390,19 +399,34 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
             # only bundles (zero contribution, zero update).
             idxs, b_active = B.partition_active(sub, active_l, P_local)
             trip = jax.lax.pmax(b_active, model_axis)
+            if cfg.record_aux:
+                b_max = idxs.shape[0]
+                aux0 = (jnp.full((b_max,), -1, jnp.int32),
+                        jnp.full((b_max,), jnp.nan, z_l.dtype))
+            else:
+                aux0 = ()
 
             def body(t, carry):
-                wz, q_sum = carry
-                wz, n_steps = step_fn(wz, idxs[t])
-                return wz, q_sum + n_steps.astype(jnp.float32)
+                wz, q_sum, aux = carry
+                wz, (n_steps, alpha) = step_fn(wz, idxs[t])
+                if cfg.record_aux:
+                    aux = (aux[0].at[t].set(n_steps.astype(jnp.int32)),
+                           aux[1].at[t].set(alpha.astype(z_l.dtype)))
+                return wz, q_sum + n_steps.astype(jnp.float32), aux
 
-            (w_l, z_l), q_sum = jax.lax.fori_loop(
-                0, trip, body, ((w_l, z_l), jnp.float32(0.0)))
+            (w_l, z_l), q_sum, aux = jax.lax.fori_loop(
+                0, trip, body, ((w_l, z_l), jnp.float32(0.0), aux0))
+            if cfg.record_aux:
+                aux_q, aux_alpha = aux
             mean_q = q_sum / jnp.maximum(trip, 1).astype(jnp.float32)
         else:
             idxs = B.partition(sub, n_local, P_local)      # (b, P_local)
-            (w_l, z_l), steps = jax.lax.scan(step_fn, (w_l, z_l), idxs)
+            (w_l, z_l), (steps, step_alphas) = jax.lax.scan(
+                step_fn, (w_l, z_l), idxs)
             mean_q = jnp.mean(steps.astype(jnp.float32))
+            if cfg.record_aux:
+                aux_q = steps.astype(jnp.int32)
+                aux_alpha = step_alphas.astype(z_l.dtype)
 
         # diagnostics: objective + FULL-set KKT violation (replicated)
         f_loss = jax.lax.psum(c * jnp.sum(loss.value(z_l, y_l)), data_axes)
@@ -429,7 +453,12 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
                            model_axis)
         n_active = jax.lax.psum(jnp.sum(active_l.astype(jnp.int32)),
                                 model_axis)
-        return w_l, z_l, f, kkt, nnz, mean_q, active_l, n_active
+        base = (w_l, z_l, f, kkt, nnz, mean_q, active_l, n_active)
+        if cfg.record_aux:
+            # q/alpha come out of the all-axes phase-3 psum: replicated
+            # on every shard, so they exit the shard_map with P() specs.
+            return base + ((aux_q, aux_alpha),)
+        return base
 
     dspec = _dspec(cfg)
 
@@ -448,19 +477,26 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
         P(),                    # c
     )
 
+    out_specs = (P(model_axis), P(dspec), P(), P(), P(), P(),
+                 P(model_axis), P())
+    if cfg.record_aux:
+        out_specs = out_specs + ((P(), P()),)
+
     mapped = _shard_map(
         outer_local, mesh=mesh,
         in_specs=in_specs,
-        out_specs=(P(model_axis), P(dspec), P(), P(), P(), P(),
-                   P(model_axis), P()),
+        out_specs=out_specs,
     )
 
     def outer(*args):
         *design_y, w, z, key, active, recheck, c = args
         key, sub = jax.random.split(key)
-        w, z, f, kkt, nnz, mean_q, active, n_active = mapped(
-            *design_y, w, z, active, sub, recheck, c)
-        return w, z, key, f, kkt, nnz, mean_q, active, n_active
+        out = mapped(*design_y, w, z, active, sub, recheck, c)
+        w, z, f, kkt, nnz, mean_q, active, n_active = out[:8]
+        base = (w, z, key, f, kkt, nnz, mean_q, active, n_active)
+        if cfg.record_aux:
+            return base + (out[8],)
+        return base
 
     return jax.jit(outer)
 

@@ -53,6 +53,8 @@ import os
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro import obs
+
 CACHE_VERSION = 1
 
 # ---------------------------------------------------------------------------
@@ -221,7 +223,21 @@ def _validate(kernel: str, config: dict) -> Optional[dict]:
 
 def lookup(kernel: str, bucket, dtype, backend: Optional[str] = None
            ) -> Optional[dict]:
-    """Validated cached winner for this cell, or None."""
+    """Validated cached winner for this cell, or None.
+
+    Metrics (registry enabled): autotune.lookup_hits counts lookups
+    that return a usable cached winner; autotune.lookup_misses counts
+    everything else (disabled tuner, empty cache, absent or stale
+    entry) — the miss path is exactly "defaults were used".
+    """
+    cfg = _lookup(kernel, bucket, dtype, backend)
+    obs.inc("autotune.lookup_hits" if cfg is not None
+            else "autotune.lookup_misses")
+    return cfg
+
+
+def _lookup(kernel: str, bucket, dtype, backend: Optional[str] = None
+            ) -> Optional[dict]:
     if not enabled():
         return None
     entries = _load_cache()
@@ -350,6 +366,7 @@ def tune(kernel: str, runner: Callable[[dict], Callable], bucket, dtype,
     trajectory). The DEFAULT config is always measured, so the recorded
     winner is never slower than the default by construction.
     """
+    t_tune = time.perf_counter_ns()
     default = dict(DEFAULTS[kernel])
     table: List[dict] = []
     measured: Dict[str, float] = {}
@@ -407,4 +424,11 @@ def tune(kernel: str, runner: Callable[[dict], Callable], bucket, dtype,
     if persist:
         record(kernel, bucket, dtype, result.config, us=result.us,
                default_us=result.default_us, backend=backend)
+    t_done = time.perf_counter_ns()
+    obs.inc("autotune.tunes")
+    obs.observe("autotune.tune_seconds", (t_done - t_tune) / 1e9)
+    obs.complete("autotune.tune", "kernels", t_tune, t_done,
+                 args={"kernel": kernel, "strategy": strategy,
+                       "candidates": len(table),
+                       "speedup": result.speedup})
     return result

@@ -40,6 +40,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import autotune, ref
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.pcdn_bundle import pcdn_bundle_kernel
@@ -67,6 +68,21 @@ def interpret_mode() -> bool:
         else:
             INTERPRET = env not in ("0", "false", "no", "off")
     return INTERPRET
+
+
+def _launch_span(kernel: str, impl: str):
+    """Per-launch trace span (DESIGN.md section 13.3) for EAGER kernel
+    dispatches only. Inside an outer jit trace `trace_state_clean()` is
+    False and host timing would measure tracing, not execution — the
+    span is suppressed there (the enclosing engine/serve span already
+    covers the compiled program). Eager spans measure dispatch; the
+    serving and benchmark callers block right after, so nesting under
+    their spans stays proper."""
+    if (obs.metrics_enabled() or obs.trace_enabled()) \
+            and jax.core.trace_state_clean():
+        obs.inc(f"kernels.{kernel}.launches")
+        return obs.span(f"kernels.{kernel}", "kernels", args={"impl": impl})
+    return obs.trace._NULL_SPAN
 
 
 def _pad_to(x: Array, axis: int, multiple: int, value=0.0) -> Array:
@@ -112,10 +128,12 @@ def pcdn_direction(XB: Array, u: Array, v: Array, w_B: Array,
     cfg = autotune.resolve(
         "pcdn_direction", autotune.shape_bucket(s=s, p=P), XB.dtype,
         {"impl": impl, "block_s": block_s, "block_p": block_p})
-    if cfg["impl"] == "xla":
-        return _direction_xla(XB, u, v, w_B, l2=l2)
-    return _direction_pallas(XB, u, v, w_B, l2=l2,
-                             block_s=cfg["block_s"], block_p=cfg["block_p"])
+    with _launch_span("pcdn_direction", cfg["impl"]):
+        if cfg["impl"] == "xla":
+            return _direction_xla(XB, u, v, w_B, l2=l2)
+        return _direction_pallas(XB, u, v, w_B, l2=l2,
+                                 block_s=cfg["block_s"],
+                                 block_p=cfg["block_p"])
 
 
 # ---------------------------------------------------------------------------
@@ -162,11 +180,12 @@ def pcdn_sparse_direction(rows: Array, vals: Array, u: Array, v: Array,
         "pcdn_sparse_direction", autotune.shape_bucket(p=P, k=K, s=s),
         vals.dtype,
         {"impl": impl, "block_p": block_p, "block_k": block_k})
-    if cfg["impl"] == "xla":
-        return _sparse_direction_xla(rows, vals, u, v, w_B, l2=l2)
-    return _sparse_direction_pallas(rows, vals, u, v, w_B, l2=l2,
-                                    block_p=cfg["block_p"],
-                                    block_k=cfg["block_k"])
+    with _launch_span("pcdn_sparse_direction", cfg["impl"]):
+        if cfg["impl"] == "xla":
+            return _sparse_direction_xla(rows, vals, u, v, w_B, l2=l2)
+        return _sparse_direction_pallas(rows, vals, u, v, w_B, l2=l2,
+                                        block_p=cfg["block_p"],
+                                        block_k=cfg["block_k"])
 
 
 # ---------------------------------------------------------------------------
@@ -199,10 +218,11 @@ def pcdn_linesearch(z: Array, delta: Array, y: Array, alphas: Array,
     cfg = autotune.resolve(
         "pcdn_linesearch", autotune.shape_bucket(s=s, q=alphas.shape[0]),
         z.dtype, {"impl": impl, "block_s": block_s})
-    if cfg["impl"] == "xla":
-        return _linesearch_xla(z, delta, y, alphas, kind=kind)
-    return _linesearch_pallas(z, delta, y, alphas, kind=kind,
-                              block_s=cfg["block_s"])
+    with _launch_span("pcdn_linesearch", cfg["impl"]):
+        if cfg["impl"] == "xla":
+            return _linesearch_xla(z, delta, y, alphas, kind=kind)
+        return _linesearch_pallas(z, delta, y, alphas, kind=kind,
+                                  block_s=cfg["block_s"])
 
 
 # ---------------------------------------------------------------------------
@@ -261,12 +281,13 @@ def pcdn_bundle(vals: Array, pos: Array, z_R: Array, y_R: Array,
         "pcdn_bundle",
         autotune.shape_bucket(p=P, k=K, r=z_R.shape[0], q=alphas.shape[0]),
         vals.dtype, {"impl": impl, "block_q": block_q})
-    if cfg["impl"] == "xla":
-        return _bundle_xla(vals, pos, z_R, y_R, w_B, alphas, c, kind=kind,
-                           l2=l2, sigma=sigma, gamma=gamma)
-    return _bundle_pallas(vals, pos, z_R, y_R, w_B, alphas, c, kind=kind,
-                          l2=l2, sigma=sigma, gamma=gamma,
-                          block_q=cfg["block_q"])
+    with _launch_span("pcdn_bundle", cfg["impl"]):
+        if cfg["impl"] == "xla":
+            return _bundle_xla(vals, pos, z_R, y_R, w_B, alphas, c,
+                               kind=kind, l2=l2, sigma=sigma, gamma=gamma)
+        return _bundle_pallas(vals, pos, z_R, y_R, w_B, alphas, c,
+                              kind=kind, l2=l2, sigma=sigma, gamma=gamma,
+                              block_q=cfg["block_q"])
 
 
 # ---------------------------------------------------------------------------
@@ -303,10 +324,11 @@ def serve_margins_dense(X: Array, idx: Array, val: Array,
     cfg = autotune.resolve(
         "serve_margins_dense", autotune.shape_bucket(b=B, n=n, k=K, a=A),
         val.dtype, {"impl": impl, "block_b": block_b, "block_a": block_a})
-    if cfg["impl"] == "xla":
-        return _margins_dense_xla(X, idx, val)
-    return _margins_dense_pallas(X, idx, val, block_b=cfg["block_b"],
-                                 block_a=cfg["block_a"])
+    with _launch_span("serve_margins_dense", cfg["impl"]):
+        if cfg["impl"] == "xla":
+            return _margins_dense_xla(X, idx, val)
+        return _margins_dense_pallas(X, idx, val, block_b=cfg["block_b"],
+                                     block_a=cfg["block_a"])
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
@@ -337,11 +359,12 @@ def serve_margins_csc(col_rows: Array, col_vals: Array, idx: Array,
         "serve_margins_csc",
         autotune.shape_bucket(n=n, kmax=k_max, k=K, a=A, b=n_requests),
         val.dtype, {"impl": impl})
-    if cfg["impl"] == "xla":
-        return _margins_csc_xla(col_rows, col_vals, idx, val,
-                                n_requests=n_requests)
-    return _margins_csc_pallas(col_rows, col_vals, idx, val,
-                               n_requests=n_requests)
+    with _launch_span("serve_margins_csc", cfg["impl"]):
+        if cfg["impl"] == "xla":
+            return _margins_csc_xla(col_rows, col_vals, idx, val,
+                                    n_requests=n_requests)
+        return _margins_csc_pallas(col_rows, col_vals, idx, val,
+                                   n_requests=n_requests)
 
 
 # ---------------------------------------------------------------------------

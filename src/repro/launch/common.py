@@ -15,6 +15,7 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import PCDNConfig, make_problem
 from repro.data import load_libsvm, paper_like
 from repro.engine import LocalBackend, ShardedBackend, ShardedPCDNConfig
@@ -108,6 +109,41 @@ def add_solver_args(ap: argparse.ArgumentParser):
                          "--out report carries); both backends")
 
 
+def add_obs_args(ap: argparse.ArgumentParser):
+    """Telemetry flags, identical in the solve / path / predict CLIs
+    (README "Observability"; DESIGN.md section 13)."""
+    ap.add_argument("--metrics-out", default=None, metavar="JSONL",
+                    help="enable the metrics registry and append one "
+                         "JSONL run record (counters, gauges, p50/p99 "
+                         "histograms) to this file on exit; "
+                         "REPRO_METRICS=off force-disables")
+    ap.add_argument("--trace-out", default=None, metavar="JSON",
+                    help="record a Chrome-trace / Perfetto trace-event "
+                         "file of the run (load at ui.perfetto.dev); "
+                         "validate with `python -m repro.obs.validate`")
+
+
+def setup_obs(args) -> None:
+    """Switch the telemetry planes on per the CLI flags (before any
+    instrumented work runs)."""
+    if getattr(args, "metrics_out", None):
+        obs.registry.enable()
+        obs.registry.reset()
+    if getattr(args, "trace_out", None):
+        obs.trace.enable(process_name="repro")
+
+
+def finish_obs(args, meta: dict | None = None) -> None:
+    """Flush the telemetry outputs the CLI flags requested."""
+    if getattr(args, "metrics_out", None):
+        obs.write_metrics(args.metrics_out, meta)
+        print(f"[obs] metrics appended to {args.metrics_out}")
+        obs.registry.disable()
+    if getattr(args, "trace_out", None):
+        if obs.trace.save(args.trace_out):
+            print(f"[obs] trace written to {args.trace_out}")
+
+
 def load_dataset(args, with_test: bool = False):
     """-> (X, y, Xte, yte, spec). File datasets have no test split and a
     None spec; profile names go through `paper_like`. Honors the layout /
@@ -138,9 +174,18 @@ def build_pcdn_config(args, **overrides) -> PCDNConfig:
               seed=args.seed, shrink=args.shrink,
               use_kernels=args.use_kernels,
               ls_scope=getattr(args, "ls_scope", "auto"),
-              dtype=DTYPE_NAMES[getattr(args, "dtype", "fp32")])
+              dtype=DTYPE_NAMES[getattr(args, "dtype", "fp32")],
+              record_aux=_record_aux(args))
     kw.update(overrides)
     return PCDNConfig(**kw)
+
+
+def _record_aux(args) -> bool:
+    """Per-bundle (q, alpha) aux outputs ride along exactly when the CLI
+    asked for telemetry — without the flags the compiled iteration stays
+    byte-identical to the uninstrumented solver (DESIGN.md 13.2)."""
+    return bool(getattr(args, "metrics_out", None)
+                or getattr(args, "trace_out", None))
 
 
 def build_sharded_config(args, c: float, loss: str) -> ShardedPCDNConfig:
@@ -150,7 +195,8 @@ def build_sharded_config(args, c: float, loss: str) -> ShardedPCDNConfig:
         P_local=max(args.P // max(args.model_parallel, 1), 1), c=c,
         loss_name=loss, seed=args.seed, shrink=args.shrink,
         use_kernels=args.use_kernels, tol_kkt=args.tol,
-        ls_scope=getattr(args, "ls_scope", "auto"))
+        ls_scope=getattr(args, "ls_scope", "auto"),
+        record_aux=_record_aux(args))
 
 
 def make_backend(args, X, y, c: float, loss: str, outer=None):
@@ -194,6 +240,14 @@ def load_warm_start(path: str, n: int, dtype) -> jnp.ndarray:
             f"warm start {path!r} has {w.shape[0]} features, problem "
             f"has {n}")
     return jnp.asarray(w, dtype)
+
+
+def history_dict(history) -> dict:
+    """JSON-ready SolveHistory: absent optional series (bundle_q /
+    bundle_alpha are None unless the backend ran with record_aux) are
+    dropped, not serialized as null."""
+    return {k: np.asarray(v).tolist() for k, v in history._asdict().items()
+            if v is not None}
 
 
 def sparse_weight_record(w) -> dict:

@@ -73,6 +73,7 @@ def main(argv=None):
                     help="write the whole sweep as ONE kind='path' serve "
                          "artifact family — every grid point becomes a "
                          "servable model (DESIGN.md section 10.1)")
+    common.add_obs_args(ap)
     args = ap.parse_args(argv)
     if args.mode == "batch" and args.shrink:
         ap.error("--shrink requires --mode sweep (the vmapped batch "
@@ -83,6 +84,7 @@ def main(argv=None):
     common.check_dtype_envelope(args, ap, loss=args.loss)
 
     X, y, Xval, yval = _load(args)
+    common.setup_obs(args)
     solver = common.build_pcdn_config(args)
     backend, prob = common.make_backend(args, X, y, 1.0, args.loss)
     print(f"[path] dataset={args.dataset} s={X.shape[0]} "
@@ -150,6 +152,10 @@ def main(argv=None):
         art.save_model(args.save_model, family)
         print(f"[path] wrote model family ({len(family)} points) to "
               f"{args.save_model}")
+    common.finish_obs(args, meta={
+        "cli": "path", "dataset": args.dataset, "mode": args.mode,
+        "backend": args.backend, "points": len(res.points),
+        "total_seconds": res.total_seconds})
     return payload
 
 

@@ -94,7 +94,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="write predictions + bucket stats JSON here")
+    from repro.launch.common import add_obs_args, finish_obs, setup_obs
+    add_obs_args(ap)
     args = ap.parse_args(argv)
+    setup_obs(args)
 
     from repro.launch.common import DTYPES
     family = load_model(args.model)
@@ -172,6 +175,10 @@ def main(argv=None):
         with open(args.out, "w") as fh:
             json.dump(payload, fh, indent=1, default=float)
         print(f"[predict] wrote {args.out}")
+    finish_obs(args, meta={
+        "cli": "predict", "model": args.model, "dataset": args.dataset,
+        "layout": args.layout, "n_requests": int(n_req),
+        "steady_rows_per_s": stats.get("steady_rows_per_s")})
     return payload
 
 

@@ -46,6 +46,7 @@ def main(argv=None):
                          "warm-start record + history) here")
     ap.add_argument("--save-model", default=None, metavar="PATH",
                     help="write just the serve artifact (no history)")
+    common.add_obs_args(ap)
     args = ap.parse_args(argv)
     if args.sharded:
         args.backend = "sharded"
@@ -68,6 +69,7 @@ def main(argv=None):
     print(f"[solve] dataset={args.dataset} s={X.shape[0]} n={X.shape[1]} "
           f"c={c} loss={args.loss} solver={args.solver} P={args.P} "
           f"backend={args.backend}")
+    common.setup_obs(args)
 
     t0 = time.time()
     if args.backend == "sharded":
@@ -80,8 +82,7 @@ def main(argv=None):
                                 tol_kkt=args.tol)
         w = backend.host_weights(res.w)
         f, conv = res.objective, res.converged
-        history = {k_: v.tolist()
-                   for k_, v in res.history._asdict().items()}
+        history = common.history_dict(res.history)
     else:
         prob = make_problem(X, y, c=c, loss=args.loss,
                             layout=args.layout,
@@ -105,8 +106,7 @@ def main(argv=None):
             res = tron.solve(prob, tron.TRONConfig(max_outer=args.max_outer,
                                                    tol_kkt=args.tol))
         w, f, conv = res.w, res.objective, res.converged
-        history = {k_: v.tolist() for k_, v in
-                   getattr(res, "history")._asdict().items()} \
+        history = common.history_dict(getattr(res, "history")) \
             if hasattr(getattr(res, "history"), "_asdict") else \
             {k_: np.asarray(v).tolist()
              for k_, v in res.history.items()}
@@ -143,6 +143,10 @@ def main(argv=None):
                 "objective": float(f), "converged": bool(conv),
                 "nnz": nnz, "seconds": dt, **record,
                 "history": history if isinstance(history, dict) else None})
+    common.finish_obs(args, meta={
+        "cli": "solve", "dataset": args.dataset, "solver": args.solver,
+        "backend": args.backend, "objective": float(f),
+        "converged": bool(conv), "nnz": nnz, "seconds": dt})
     return f
 
 

@@ -1,0 +1,64 @@
+"""Unified telemetry subsystem (DESIGN.md section 13).
+
+Two data planes, one enable story:
+
+  * `repro.obs.registry` — process-wide metrics (counters, gauges,
+    fixed-bucket histograms) for the host-side control plane. Strictly
+    one boolean check when disabled.
+  * `repro.obs.trace`    — Chrome-trace / Perfetto trace-event writer
+    with span helpers ("X" complete events on named tracks) and a
+    schema validator.
+
+Device-side solver signals (per-bundle accepted alpha, backtrack depth
+q^t, active-set size) do NOT go through host callbacks: the engine
+iteration surfaces them as extra device outputs behind the `record_aux`
+config flag and the host loop folds them into `SolveHistory` (and, when
+the registry is enabled, into histograms) at the per-iteration sync it
+already performs. With `record_aux=False` the compiled step is
+byte-identical to the uninstrumented solver.
+
+Convenience facade: `obs.enable(metrics=..., trace=...)` switches both
+planes; the module-level helpers (`inc`, `observe`, `span`, ...) proxy
+to the respective plane's zero-cost gate.
+"""
+from __future__ import annotations
+
+from repro.obs import registry, trace
+from repro.obs.registry import (ALPHA_BOUNDS, LATENCY_BOUNDS_S, Q_BOUNDS,
+                                Histogram, Registry, get_registry, inc,
+                                observe, observe_many, set_gauge,
+                                write_metrics)
+from repro.obs.trace import (TraceWriter, complete, counter, instant, span,
+                             validate_trace, validate_trace_file)
+
+__all__ = [
+    "registry", "trace", "Registry", "Histogram", "TraceWriter",
+    "LATENCY_BOUNDS_S", "Q_BOUNDS", "ALPHA_BOUNDS",
+    "inc", "observe", "observe_many", "set_gauge", "write_metrics",
+    "span", "complete", "instant", "counter",
+    "validate_trace", "validate_trace_file",
+    "enable", "disable", "metrics_enabled", "trace_enabled",
+]
+
+
+def enable(metrics: bool = True, trace_: bool = False,
+           process_name: str = "repro") -> None:
+    """Switch the telemetry planes on. REPRO_METRICS=off still wins for
+    the metrics plane (registry.env_force_off)."""
+    if metrics:
+        registry.enable()
+    if trace_:
+        trace.enable(process_name)
+
+
+def disable() -> None:
+    registry.disable()
+    trace.disable()
+
+
+def metrics_enabled() -> bool:
+    return registry.enabled()
+
+
+def trace_enabled() -> bool:
+    return trace.enabled()

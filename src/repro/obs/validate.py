@@ -1,0 +1,36 @@
+"""Trace-file schema validator CLI (the CI gate):
+
+    python -m repro.obs.validate /tmp/trace.json [...]
+
+Loads each file and asserts it is valid trace-event JSON per the
+contract of `repro.obs.trace` — required ph/ts/dur fields, known
+phases, and properly nested (never partially overlapping) "X" spans on
+every (pid, tid) track. Exit code 0 iff every file validates.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.obs.trace import validate_trace_file
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: python -m repro.obs.validate TRACE.json [...]",
+              file=sys.stderr)
+        return 2
+    status = 0
+    for path in argv:
+        try:
+            n = validate_trace_file(path)
+        except (OSError, ValueError) as exc:
+            print(f"[obs.validate] {path}: INVALID — {exc}", file=sys.stderr)
+            status = 1
+        else:
+            print(f"[obs.validate] {path}: OK ({n} events)")
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

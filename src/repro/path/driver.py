@@ -21,6 +21,7 @@ from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.pcdn import PCDNConfig
 from repro.core.problem import L1Problem, validation_accuracy
 from repro.engine import loop as engine_loop
@@ -118,6 +119,7 @@ def run_path(problem: Optional[L1Problem], cfg: PathConfig,
     weights = np.zeros((len(cs), n), np.dtype(backend.dtype))
     t_total0 = time.perf_counter()
     for i, c in enumerate(cs):
+        t0_ns = time.perf_counter_ns()
         t0 = time.perf_counter()
         if not cfg.warm_start:
             state = backend.init_state()
@@ -131,6 +133,10 @@ def run_path(problem: Optional[L1Problem], cfg: PathConfig,
             recheck_every=solver.recheck_every,
             tol_rel_obj=solver.tol_rel_obj)
         seconds = time.perf_counter() - t0
+        obs.complete("path.point", "path", t0_ns, time.perf_counter_ns(),
+                     args={"i": i, "c": float(c), "n_outer": res.n_outer,
+                           "converged": res.converged})
+        obs.inc("path.points")
         w_host = backend.host_weights(state.w)
         val_acc = (validation_accuracy(val_design, val_y, w_host)
                    if val_design is not None else None)

@@ -24,6 +24,14 @@ Per bucket the batcher accounts calls, rows, padding overhead, warmup
 (first-call, compile-inclusive) latency and steady-state latency, so
 `stats()` exposes exactly the throughput/recompile story
 benchmarks/bench_serve.py reports.
+
+Observability (DESIGN.md section 13): each bucket additionally keeps a
+fixed-bucket latency histogram of its steady-state calls, so `stats()`
+reports p50/p99 per bucket — always on, since a histogram observe is
+one bisect. When the global metrics registry is enabled the same
+events are mirrored there (serve.rows / serve.pad_rows /
+serve.compiles counters, serve.latency_s histograms) and every engine
+invocation emits a span on the "serve" trace track.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.design_matrix import PaddedCSCDesign, padded_csc_arrays
 from repro.serve.predict import (ModelBank, margins_dense,
                                  margins_padded_csc)
@@ -61,6 +70,10 @@ class BucketStats:
     warmup_rows: int = 0           # real rows of the first (compile) call
     warmup_seconds: float = 0.0    # first call (includes XLA compile)
     busy_seconds: float = 0.0      # steady-state time after warmup
+    # steady-state per-call latency distribution (warmup excluded — the
+    # compile call would dominate every quantile)
+    latency: obs.Histogram = dataclasses.field(
+        default_factory=lambda: obs.Histogram(obs.LATENCY_BOUNDS_S))
 
     @property
     def warm_calls(self) -> int:
@@ -81,7 +94,9 @@ class BucketStats:
                 "warmup_rows": self.warmup_rows,
                 "warmup_seconds": self.warmup_seconds,
                 "busy_seconds": self.busy_seconds,
-                "rows_per_s": self.rows_per_s}
+                "rows_per_s": self.rows_per_s,
+                "latency_p50_s": self.latency.quantile(0.5),
+                "latency_p99_s": self.latency.quantile(0.99)}
 
 
 class MicroBatcher:
@@ -157,18 +172,34 @@ class MicroBatcher:
             run = lambda: margins_padded_csc(self.bank, packed,
                                              use_kernels=self.use_kernels)
         st = self._stats[bucket]
+        t0_ns = time.perf_counter_ns()
         t0 = time.perf_counter()
         z = run()
         z = np.asarray(z)              # blocks until the device is done
         dt = time.perf_counter() - t0
-        if st.calls == 0:
+        warm = st.calls > 0
+        if warm:
+            st.busy_seconds += dt
+            st.latency.observe(dt)
+        else:
             st.warmup_seconds += dt
             st.warmup_rows = r
-        else:
-            st.busy_seconds += dt
         st.calls += 1
         st.rows += r
         st.pad_rows += bucket - r
+        if obs.metrics_enabled():
+            obs.inc("serve.calls")
+            obs.inc("serve.rows", r)
+            obs.inc("serve.pad_rows", bucket - r)
+            if warm:
+                obs.observe(f"serve.latency_s.bucket_{bucket}", dt)
+                obs.observe("serve.latency_s", dt)
+            else:
+                obs.inc("serve.compiles")
+                obs.observe("serve.warmup_s", dt)
+        obs.complete("serve.chunk", "serve", t0_ns, time.perf_counter_ns(),
+                     args={"bucket": bucket, "rows": r,
+                           "pad_rows": bucket - r, "warmup": not warm})
         return z[:r]
 
     def _pack_csc(self, csr, start: int, stop: int,
@@ -210,6 +241,17 @@ class MicroBatcher:
         # real served requests only — padding is engine overhead, not
         # traffic (each bucket's pad_rows reports it)
         warm_rows = sum(s["rows"] - s["warmup_rows"] for s in per_bucket)
+        # batcher-wide steady-state latency: merge the per-bucket
+        # histograms (same fixed bounds, so counts add exactly)
+        agg = obs.Histogram(obs.LATENCY_BOUNDS_S)
+        for b in self.buckets:
+            h = self._stats[b].latency
+            if h.count:
+                agg.counts = [a + c for a, c in zip(agg.counts, h.counts)]
+                agg.count += h.count
+                agg.total += h.total
+                agg.vmin = min(agg.vmin, h.vmin)
+                agg.vmax = max(agg.vmax, h.vmax)
         return {
             "layout": self.layout,
             "use_kernels": self.use_kernels,
@@ -217,4 +259,6 @@ class MicroBatcher:
             "total_rows": rows,
             "compiles": len(per_bucket),   # one warmup per bucket shape
             "steady_rows_per_s": (warm_rows / busy) if busy > 0 else None,
+            "latency_p50_s": agg.quantile(0.5),
+            "latency_p99_s": agg.quantile(0.99),
         }

@@ -1,0 +1,536 @@
+"""Telemetry subsystem (DESIGN.md section 13): registry / trace units,
+the record_aux engine contract on both backends, the zero-cost-when-
+disabled guarantees, wall-clock bookkeeping, and the SolveHistory edge
+paths (divergence guard, lockstep freeze, shrink recheck)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core import PCDNConfig, make_problem, scdn, solve
+from repro.core.scdn import SCDNConfig
+from repro.data import make_classification
+from repro.engine import (LocalBackend, ShardedBackend, ShardedPCDNConfig,
+                          loop as engine_loop)
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    """Every test starts and ends with both telemetry planes off — the
+    module-level gates are process state and must not leak across tests
+    (or into the rest of the suite)."""
+    obs.disable()
+    obs.registry.reset()
+    yield
+    obs.disable()
+    obs.registry.reset()
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification(300, 128, sparsity=0.8, corr=0.3, seed=2)
+
+
+@pytest.fixture(scope="module")
+def problem(data):
+    X, y, _ = data
+    return make_problem(X, y, c=1.0)
+
+
+# ---------------------------------------------------------------------------
+# registry units
+
+
+def test_registry_disabled_records_nothing():
+    obs.inc("x")
+    obs.set_gauge("g", 1.0)
+    obs.observe("h", 0.5)
+    obs.observe_many("h", [1.0, 2.0])
+    assert obs.registry.get_registry().empty
+
+
+def test_registry_counters_gauges_histograms():
+    obs.registry.enable()
+    obs.inc("c")
+    obs.inc("c", 2.0)
+    obs.set_gauge("g", 7.0)
+    obs.observe_many("q", [1, 1, 1, 2, 3], bounds=obs.Q_BOUNDS)
+    snap = obs.registry.get_registry().snapshot()
+    assert snap["counters"]["c"] == 3.0
+    assert snap["gauges"]["g"] == 7.0
+    h = snap["histograms"]["q"]
+    assert h["count"] == 5 and h["min"] == 1 and h["max"] == 3
+
+
+def test_histogram_quantiles_interpolate():
+    h = obs.Histogram(bounds=(1.0, 2.0, 4.0, 8.0))
+    h.observe_many([0.5] * 50 + [3.0] * 50)
+    # half the mass below 1.0, half in (2, 4]: p50 sits at the boundary,
+    # p99 inside the (2, 4] bucket
+    assert h.quantile(0.5) <= 2.0
+    assert 2.0 < h.quantile(0.99) <= 4.0
+
+
+def test_env_kill_switch(monkeypatch):
+    monkeypatch.setenv("REPRO_METRICS", "off")
+    assert obs.registry.enable() is False
+    obs.inc("x")
+    assert obs.registry.get_registry().empty
+
+
+def test_write_metrics_jsonl(tmp_path):
+    obs.registry.enable()
+    obs.inc("runs")
+    path = tmp_path / "m.jsonl"
+    obs.write_metrics(str(path), meta={"cli": "test"})
+    obs.write_metrics(str(path), meta={"cli": "test"})
+    lines = path.read_text().strip().splitlines()
+    assert len(lines) == 2
+    rec = json.loads(lines[0])
+    assert rec["cli"] == "test"
+    assert rec["metrics"]["counters"]["runs"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# trace units
+
+
+def test_trace_spans_nest_and_validate():
+    tracer = obs.trace.enable(process_name="t")
+    with obs.span("outer", "engine"):
+        with obs.span("inner", "engine", args={"k": 1}):
+            pass
+    obs.instant("mark", "engine")
+    obs.counter("n_active", 5.0, "engine")
+    d = tracer.to_dict()
+    n = obs.validate_trace(d)
+    assert n >= 4  # 2 spans + instant + counter (+ metadata events)
+    names = {e["name"] for e in d["traceEvents"]}
+    assert {"outer", "inner", "mark", "n_active"} <= names
+
+
+def test_trace_disabled_span_is_null():
+    assert obs.trace.get_tracer() is None
+    with obs.span("x", "engine"):
+        pass
+    assert obs.trace.get_tracer() is None
+    assert obs.trace.save("/nonexistent/never-written.json") is False
+
+
+def test_validate_trace_rejects_garbage():
+    with pytest.raises(ValueError, match="traceEvents"):
+        obs.validate_trace({"events": []})
+    with pytest.raises(ValueError, match="missing required field"):
+        obs.validate_trace({"traceEvents": [{"name": "a", "ph": "X"}]})
+    with pytest.raises(ValueError, match="unknown phase"):
+        obs.validate_trace({"traceEvents": [
+            {"name": "a", "ph": "Z", "ts": 0, "pid": 1, "tid": 1}]})
+    # partial overlap on one track: [0, 10] vs [5, 15]
+    with pytest.raises(ValueError, match="partially overlaps"):
+        obs.validate_trace({"traceEvents": [
+            {"name": "a", "ph": "X", "ts": 0, "dur": 10, "pid": 1, "tid": 1},
+            {"name": "b", "ph": "X", "ts": 5, "dur": 10, "pid": 1, "tid": 1},
+        ]})
+
+
+def test_validate_trace_file_roundtrip(tmp_path):
+    obs.trace.enable(process_name="t")
+    with obs.span("s", "main"):
+        pass
+    path = tmp_path / "t.json"
+    assert obs.trace.save(str(path)) is True
+    assert obs.validate_trace_file(str(path)) >= 1
+
+
+# ---------------------------------------------------------------------------
+# record_aux: the 10th-output engine contract (DESIGN.md section 13.2)
+
+
+def test_local_outer_arity_disabled_vs_enabled(problem):
+    """Without record_aux the outer returns EXACTLY the 9-tuple contract
+    — no extra device outputs ride along for a disabled plane."""
+    cfg = PCDNConfig(P=32, max_outer=5, seed=0)
+    b_off = LocalBackend(problem, cfg)
+    st = b_off.init_state()
+    out = b_off.outer(st.w, st.z, st.key, st.active, jnp.asarray(True),
+                      jnp.asarray(1.0, st.w.dtype))
+    assert len(out) == 9
+
+    import dataclasses
+    b_on = LocalBackend(problem,
+                        dataclasses.replace(cfg, record_aux=True))
+    out = b_on.outer(st.w, st.z, st.key, st.active, jnp.asarray(True),
+                     jnp.asarray(1.0, st.w.dtype))
+    assert len(out) == 10
+    q, alpha = out[9]
+    b = problem.n_features // 32 + (problem.n_features % 32 > 0)
+    assert q.shape == (b,) and alpha.shape == (b,)
+
+
+def test_local_aux_lands_in_history_and_matches_ls_steps(problem):
+    cfg = PCDNConfig(P=32, max_outer=10, tol_kkt=1e-8, seed=0,
+                     record_aux=True)
+    res = solve(problem, cfg)
+    h = res.history
+    assert h.bundle_q is not None and h.bundle_alpha is not None
+    K = res.n_outer
+    assert h.bundle_q.shape[0] == K == h.bundle_alpha.shape[0]
+    # no shrinking: every bundle runs every iteration, no sentinels
+    assert np.all(h.bundle_q >= 0)
+    assert np.all(np.isfinite(h.bundle_alpha))
+    # ls_steps was always the mean over bundles; the aux series must
+    # reproduce it exactly
+    np.testing.assert_allclose(h.bundle_q.mean(axis=1), h.ls_steps,
+                               rtol=1e-6)
+    # accepted alphas are Armijo-valid: beta^q in [0, 1] (0 when a
+    # bundle exhausts its backtracks near convergence)
+    assert np.all(h.bundle_alpha >= 0) and np.all(h.bundle_alpha <= 1.0)
+
+
+def test_record_aux_does_not_perturb_solution(problem):
+    cfg = PCDNConfig(P=32, max_outer=15, tol_kkt=1e-8, seed=0)
+    import dataclasses
+    r0 = solve(problem, cfg)
+    r1 = solve(problem, dataclasses.replace(cfg, record_aux=True))
+    assert r1.n_outer == r0.n_outer
+    np.testing.assert_array_equal(np.asarray(r0.w), np.asarray(r1.w))
+    assert r0.history.bundle_q is None
+    assert r1.history.bundle_q is not None
+
+
+def test_shrink_aux_uses_sentinels(data):
+    """Shrinking runs a data-dependent number of bundles per iteration;
+    slots past the live count must carry q == -1 / alpha == nan, and the
+    two sentinel masks must agree."""
+    X, y, _ = data
+    prob = make_problem(X, y, c=1.0)      # shrinks to ~16 of 128 active
+    cfg = PCDNConfig(P=32, max_outer=40, tol_kkt=1e-6, seed=0,
+                     shrink=True, record_aux=True)
+    res = solve(prob, cfg)
+    h = res.history
+    assert h.bundle_q is not None
+    ran = h.bundle_q >= 0
+    np.testing.assert_array_equal(ran, np.isfinite(h.bundle_alpha))
+    assert ran.any(), "some bundles must have run"
+    assert (~ran).any(), "shrinking must have idled some bundle slots"
+    # rows stay consistent with the rest of the history
+    assert h.bundle_q.shape[0] == len(h.n_active) == res.n_outer
+
+
+def test_fused_kernel_path_reports_aux(problem):
+    cfg = PCDNConfig(P=32, max_outer=5, tol_kkt=1e-8, seed=0,
+                     use_kernels=True, record_aux=True)
+    res = solve(problem, cfg)
+    assert res.history.bundle_q is not None
+    assert np.all(res.history.bundle_q >= 0)
+
+
+def test_sharded_1x1_aux(data):
+    X, y, _ = data
+    mesh = make_host_mesh(1, 1)
+    cfg = ShardedPCDNConfig(P_local=32, c=1.0, seed=0, record_aux=True)
+    backend = ShardedBackend(X, y, mesh, cfg)
+    res = engine_loop.solve(backend, 1.0, max_outer=6, tol_kkt=1e-8)
+    h = res.history
+    assert h.bundle_q is not None and h.bundle_alpha is not None
+    assert h.bundle_q.shape[0] == res.n_outer
+    assert np.all(h.bundle_q >= 0)
+    np.testing.assert_allclose(h.bundle_q.mean(axis=1), h.ls_steps,
+                               rtol=1e-5)
+
+
+def test_sharded_disabled_arity(data):
+    X, y, _ = data
+    mesh = make_host_mesh(1, 1)
+    cfg = ShardedPCDNConfig(P_local=32, c=1.0, seed=0)
+    backend = ShardedBackend(X, y, mesh, cfg)
+    st = backend.init_state()
+    out = backend.outer(st.w, st.z, st.key, st.active, jnp.asarray(True),
+                        jnp.asarray(1.0, backend.dtype))
+    assert len(out) == 9
+    res = engine_loop.solve(backend, 1.0, max_outer=3, tol_kkt=1e-8)
+    assert res.history.bundle_q is None
+
+
+def test_solver_loop_zero_registry_activity_when_disabled(problem):
+    """The acceptance guarantee: an uninstrumented run leaves the
+    registry COMPLETELY untouched — no counter, gauge or histogram may
+    appear as a side effect of solving."""
+    solve(problem, PCDNConfig(P=32, max_outer=5, seed=0))
+    assert obs.registry.get_registry().empty
+    assert obs.trace.get_tracer() is None
+
+
+def test_solver_loop_populates_registry_when_enabled(problem):
+    obs.enable(metrics=True)
+    cfg = PCDNConfig(P=32, max_outer=8, tol_kkt=1e-8, seed=0,
+                     record_aux=True)
+    res = solve(problem, cfg)
+    snap = obs.registry.get_registry().snapshot()
+    assert snap["counters"]["solver.outer_iters"] == res.n_outer
+    assert snap["histograms"]["solver.iter_seconds"]["count"] == res.n_outer
+    hq = snap["histograms"]["solver.bundle_q"]
+    assert hq["count"] == int(np.sum(res.history.bundle_q >= 0))
+    assert snap["gauges"]["solver.n_active"] == res.history.n_active[-1]
+
+
+# ---------------------------------------------------------------------------
+# wall-clock bookkeeping (the block_until_ready-before-timestamp fix)
+
+
+def test_wall_clock_monotone_and_sums_to_total(problem):
+    import time
+    cfg = PCDNConfig(P=32, max_outer=12, tol_kkt=1e-8, seed=0)
+    t0 = time.perf_counter()
+    res = solve(problem, cfg)
+    total = time.perf_counter() - t0
+    wt = res.history.wall_time
+    assert wt.shape == (res.n_outer,)
+    # cumulative seconds: strictly nondecreasing, and the final entry
+    # accounts for (almost) the whole solve — device work synced before
+    # each timestamp, so no iteration's time leaks past the last row
+    assert np.all(np.diff(wt) >= 0)
+    assert 0 < wt[-1] <= total
+    assert wt[-1] >= 0.5 * total, \
+        "per-iteration times must account for the bulk of the solve"
+
+
+def test_iter_seconds_histogram_consistent_with_wall_time(problem):
+    obs.enable(metrics=True)
+    cfg = PCDNConfig(P=32, max_outer=10, tol_kkt=1e-8, seed=0)
+    res = solve(problem, cfg)
+    h = obs.registry.get_registry().snapshot()[
+        "histograms"]["solver.iter_seconds"]
+    # summed per-iteration device+host time cannot exceed the loop's own
+    # cumulative clock (it excludes history bookkeeping between syncs)
+    assert h["count"] == res.n_outer
+    assert h["sum"] <= res.history.wall_time[-1] * 1.5
+
+
+# ---------------------------------------------------------------------------
+# SolveHistory edge paths
+
+
+def test_divergence_guard_history_consistent():
+    X, y, _ = make_classification(300, 200, sparsity=0.0, corr=0.95,
+                                  seed=2, row_normalize=False)
+    prob = make_problem(X, y, c=1.0)
+    obs.enable(metrics=True)
+    res = scdn.solve(prob, SCDNConfig(P_bar=64, max_rounds=30))
+    assert res.diverged and not res.converged
+    # the aborted loop still records one consistent row per round run
+    k = res.n_rounds
+    assert len(res.history["objective"]) == k
+    assert len(res.history["wall_time"]) == k
+    assert obs.registry.get_registry().snapshot()[
+        "counters"]["solver.divergence_trips"] == 1.0
+
+
+def test_divergence_guard_emits_trace_instant():
+    X, y, _ = make_classification(300, 200, sparsity=0.0, corr=0.95,
+                                  seed=2, row_normalize=False)
+    prob = make_problem(X, y, c=1.0)
+    tracer = obs.trace.enable(process_name="t")
+    scdn.solve(prob, SCDNConfig(P_bar=64, max_rounds=30))
+    events = tracer.to_dict()["traceEvents"]
+    assert any(e["name"] == "engine.divergence_guard" and e["ph"] == "i"
+               for e in events)
+    obs.validate_trace(tracer.to_dict())
+
+
+def test_lockstep_freeze_bitwise():
+    """A problem frozen at iteration k must keep its carry bit-identical
+    to its value AT k while stragglers keep iterating."""
+    rates = jnp.asarray([0.1, 0.5, 0.9], jnp.float32)
+
+    def outer(x, r):
+        x = x * r
+        kkt = jnp.abs(x)
+        return x, x, kkt, jnp.ones_like(x, jnp.int32)
+
+    x0 = jnp.ones((3,), jnp.float32)
+    (x,), f, kkt, nnz, n_outer, done = engine_loop.run_lockstep_loop(
+        outer, (x0,), (rates,), max_outer=100, tol_kkt=1e-3,
+        dtype=jnp.float32)
+    assert bool(jnp.all(done))
+    x = np.asarray(x)
+    n_outer = np.asarray(n_outer)
+
+    def ref(rate, k):
+        """Iterative f32 product — the exact arithmetic the loop does."""
+        v = np.float32(1.0)
+        for _ in range(int(k)):
+            v = np.float32(v * np.float32(rate))
+        return v
+
+    for i, rate in enumerate((0.1, 0.5, 0.9)):
+        # froze exactly at the first k where |x| crosses tol ...
+        assert abs(ref(rate, n_outer[i])) <= 1e-3
+        assert abs(ref(rate, n_outer[i] - 1)) > 1e-3
+        # ... and the frozen value is bit-identical to the value AT k
+        assert x[i] == ref(rate, n_outer[i])
+    # slower decay -> strictly more iterations (stragglers kept running
+    # after the fast problem froze)
+    assert n_outer[0] < n_outer[1] < n_outer[2]
+
+
+def test_shrink_recheck_history_consistent(data):
+    """recheck_every > 1: iterations between rechecks still record full
+    history rows; n_active may only grow ON a recheck iteration."""
+    X, y, _ = data
+    prob = make_problem(X, y, c=1.0)
+    cfg = PCDNConfig(P=32, max_outer=40, tol_kkt=1e-6, seed=0,
+                     shrink=True, recheck_every=5, record_aux=True)
+    res = solve(prob, cfg)
+    h = res.history
+    k = res.n_outer
+    for field in ("objective", "kkt", "nnz", "ls_steps", "wall_time",
+                  "n_active"):
+        assert len(getattr(h, field)) == k, field
+    assert h.bundle_q.shape[0] == k
+    grow = np.flatnonzero(np.diff(h.n_active) > 0) + 1
+    assert all(g % 5 == 0 for g in grow), \
+        "un-shrink may only happen on recheck iterations"
+
+
+# ---------------------------------------------------------------------------
+# serving + kernels instrumentation
+
+
+def test_batcher_latency_quantiles_and_counters():
+    from repro.serve.batcher import MicroBatcher
+    from repro.serve.predict import ModelBank
+    rng = np.random.default_rng(0)
+    W = np.zeros((4, 256), np.float32)
+    W[:, :8] = rng.standard_normal((4, 8))
+    bank = ModelBank.from_dense(W, kind="path")
+    obs.enable(metrics=True, trace_=True)
+    b = MicroBatcher(bank, buckets=(8, 32), layout="dense")
+    X = rng.standard_normal((64, 256)).astype(np.float32)
+    for lo, hi in ((0, 5), (5, 37), (37, 64), (0, 30)):
+        b.predict(X[lo:hi])
+    stats = b.stats()
+    assert stats["latency_p50_s"] is not None
+    assert stats["latency_p99_s"] >= stats["latency_p50_s"]
+    for bucket in stats["buckets"]:
+        assert "latency_p50_s" in bucket
+    snap = obs.registry.get_registry().snapshot()
+    assert snap["counters"]["serve.rows"] == 64 + 30
+    assert snap["counters"]["serve.compiles"] == 2  # one per bucket
+    obs.validate_trace(obs.trace.get_tracer().to_dict())
+
+
+def test_batcher_disabled_zero_registry_activity():
+    from repro.serve.batcher import MicroBatcher
+    from repro.serve.predict import ModelBank
+    W = np.zeros((2, 64), np.float32)
+    W[:, 0] = 1.0
+    b = MicroBatcher(ModelBank.from_dense(W, kind="path"),
+                     buckets=(8,), layout="dense")
+    b.predict(np.ones((5, 64), np.float32))
+    assert obs.registry.get_registry().empty
+
+
+def test_autotune_lookup_counters(monkeypatch, tmp_path):
+    from repro.kernels import autotune
+    obs.enable(metrics=True)
+    # disabled tuner -> every lookup is a miss ("defaults were used")
+    monkeypatch.setenv("REPRO_AUTOTUNE", "off")
+    assert autotune.lookup("pcdn_direction", (64, 64), "float32") is None
+    snap = obs.registry.get_registry().snapshot()
+    assert snap["counters"]["autotune.lookup_misses"] == 1.0
+    assert "autotune.lookup_hits" not in snap["counters"]
+
+
+def test_kernel_launch_counter_eager_only():
+    """Eager ops.* dispatch increments kernels.<name>.launches; the same
+    op traced under jit must not touch the registry from inside tracing
+    (that would be a host callback in the compiled path)."""
+    from repro.kernels import ops
+    obs.enable(metrics=True)
+    XB = jnp.ones((8, 4), jnp.float32)
+    u = jnp.full((8,), 0.25, jnp.float32)
+    v = jnp.ones((8,), jnp.float32)
+    w_B = jnp.zeros((4,), jnp.float32)
+    ops.pcdn_direction(XB, u, v, w_B)
+    counters = obs.registry.get_registry().counters
+    assert counters.get("kernels.pcdn_direction.launches") == 1.0
+
+    @jax.jit
+    def traced(XB, u, v, w_B):
+        return ops.pcdn_direction(XB, u, v, w_B)[0]
+    traced(XB, u, v, w_B)
+    counters = obs.registry.get_registry().counters
+    assert counters.get("kernels.pcdn_direction.launches") == 1.0, \
+        "traced dispatch must not count launches"
+
+
+# ---------------------------------------------------------------------------
+# CLI integration (in-process)
+
+
+def test_solve_cli_metrics_and_trace(tmp_path):
+    from repro.launch import solve as solve_cli
+    from repro.data.libsvm import save_libsvm
+    X, y, _ = make_classification(120, 60, sparsity=0.5, seed=0)
+    ds = tmp_path / "d.svm"
+    save_libsvm(str(ds), X, y)
+    mpath, tpath, rpath = (str(tmp_path / n) for n in
+                           ("m.jsonl", "t.json", "r.json"))
+    solve_cli.main(["--dataset", str(ds), "--P", "16", "--max-outer", "10",
+                    "--tol", "1e-6", "--c", "5.0",
+                    "--metrics-out", mpath, "--trace-out", tpath,
+                    "--out", rpath])
+    assert obs.validate_trace_file(tpath) > 0
+    rec = json.loads(open(mpath).read().strip().splitlines()[-1])
+    assert rec["cli"] == "solve"
+    assert "solver.bundle_q" in rec["metrics"]["histograms"]
+    report = json.load(open(rpath))
+    assert "bundle_q" in report["history"]
+    assert "bundle_alpha" in report["history"]
+    # CLI run disables the planes on exit
+    assert not obs.metrics_enabled() and not obs.trace_enabled()
+
+
+def test_solve_cli_without_flags_records_nothing(tmp_path):
+    from repro.launch import solve as solve_cli
+    from repro.data.libsvm import save_libsvm
+    X, y, _ = make_classification(120, 60, sparsity=0.5, seed=0)
+    ds = tmp_path / "d.svm"
+    save_libsvm(str(ds), X, y)
+    rpath = str(tmp_path / "r.json")
+    solve_cli.main(["--dataset", str(ds), "--P", "16", "--max-outer", "5",
+                    "--c", "5.0", "--out", rpath])
+    assert obs.registry.get_registry().empty
+    report = json.load(open(rpath))
+    assert "bundle_q" not in report["history"]
+
+
+def test_obs_validate_cli(tmp_path):
+    obs.trace.enable(process_name="t")
+    with obs.span("s", "main"):
+        pass
+    good = tmp_path / "good.json"
+    obs.trace.save(str(good))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"traceEvents": [{"name": "a"}]}))
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-m", "repro.obs.validate",
+                        str(good)], capture_output=True, text=True,
+                       cwd=os.path.dirname(os.path.dirname(__file__)),
+                       env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    r = subprocess.run([sys.executable, "-m", "repro.obs.validate",
+                        str(good), str(bad)], capture_output=True,
+                       text=True,
+                       cwd=os.path.dirname(os.path.dirname(__file__)),
+                       env=env)
+    assert r.returncode != 0
