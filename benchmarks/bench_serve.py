@@ -103,6 +103,28 @@ def bench_scorer(K, n, batches, sparsities, seed=0):
     return rows
 
 
+def derive_route_crossover(scorer_rows):
+    """The measured dense-vs-union-gather crossover per sparsity level:
+    the smallest measured batch from which the sparse-gather route wins
+    (speedup >= 1 there AND at every larger measured batch — monotone
+    in practice, and requiring it keeps a noisy mid-table win from
+    flipping the route), or None when dense wins everywhere. Committed
+    under the `route_crossover` key; serve.predict.pick_route reads it
+    so launch.predict --route auto picks the measured winner instead of
+    always preferring the sparse path."""
+    table = []
+    for sp in sorted({r["sparsity"] for r in scorer_rows}):
+        rows = sorted((r for r in scorer_rows if r["sparsity"] == sp),
+                      key=lambda r: r["batch"])
+        crossover = None
+        for i, r in enumerate(rows):
+            if all(q["speedup"] >= 1.0 for q in rows[i:]):
+                crossover = r["batch"]
+                break
+        table.append({"sparsity": sp, "min_batch_sparse": crossover})
+    return table
+
+
 def bench_csc_scorer(K, n, batches, sparsity, req_density, seed=0):
     rng = np.random.default_rng(seed + 2)
     bank = make_bank(K, n, sparsity, seed=seed)
@@ -211,6 +233,7 @@ def main(argv=None):
         "speedup_at_ge_099": best["speedup"],
         "headline_sparsity": best["sparsity"],
         "headline_batch": best["batch"],
+        "route_crossover": derive_route_crossover(scorer),
         "csc_scorer": bench_csc_scorer(K, n, batches, sparsities[-1],
                                        req_density=0.02),
         "batcher": bench_batcher(K, n, sparsities[-1], n_requests, buckets),

@@ -1,0 +1,373 @@
+"""Serving-loop load benchmark -> BENCH_serve2.json (DESIGN.md 14.7).
+
+    PYTHONPATH=src python benchmarks/bench_serve2.py [--smoke]
+
+Open-loop Poisson load against the continuous-batching `ServeLoop`
+(serve/loop.py), the headline p50/p99-vs-offered-load story of ROADMAP
+item 1. Three sections:
+
+  * sync — the synchronous per-batch baseline: the SAME machinery with
+    buckets=(1,), i.e. a FIFO server that scores one request per engine
+    round-trip (the MicroBatcher's semantics behind a queue, so the
+    comparison isolates batching policy, not implementation).
+  * loop — deadline-aware continuous batching over the full bucket
+    ladder. Both arms sweep a geometric ladder of offered rates anchored
+    at each arm's measured compute capacity; a rate point is SUSTAINED
+    when its measured p99 admission-to-response latency meets the SLO
+    with zero admission rejects. The headline is the ratio of max
+    sustained rows/s (acceptance: >= 2x, pinned by the guard test).
+  * hot_swap — steady mid-rate traffic with two live best-c swaps from
+    a freshly "solved" path family fired mid-stream: recompiles must be
+    ZERO (scorer jit caches flat — capacity-padded banks), responses
+    span old and new versions with no gap, and SLO violations during
+    the swap run stay zero.
+
+Rates are OPEN-LOOP: arrivals never wait for responses; when the
+generator falls behind it submits immediately and the measured offered
+rate (not the target) is what sustained/max numbers quote.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import gc
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+import jax
+
+from repro.serve.artifact import ModelArtifact, ModelFamily
+from repro.serve.loop import ServeLoop, drive_poisson
+from repro.serve.predict import scorer_cache_sizes
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results")
+
+# a rate point is sustained when measured p99 <= SLO and nothing was shed
+SLO_MS = 25.0
+BUDGET_FRAC = 0.6          # request budget under the SLO: jitter headroom
+RATE_LADDER = (0.25, 0.4, 0.6, 0.8, 1.0, 1.2, 1.5)
+
+
+@contextlib.contextmanager
+def _quiesce_gc():
+    """Collector pauses (the default gen0 threshold is 700 objects; a
+    drive allocates a future + result per request) would show up as
+    latency tail that is the BENCH's fault, not the server's — collect
+    up front, disable during the measured drive, restore after."""
+    gc.collect()
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        yield
+    finally:
+        if was_enabled:
+            gc.enable()
+
+
+def make_family(n: int, nnz: int, K: int, seed: int,
+                kind: str = "path") -> ModelFamily:
+    """K synthetic sparse models as a servable family; path members get
+    val_accuracy metas so pick_best_c has something to select on."""
+    rng = np.random.default_rng(seed)
+    models = []
+    for k in range(K):
+        idx = np.sort(rng.choice(n, size=nnz, replace=False))
+        models.append(ModelArtifact(
+            n_features=n, w_indices=idx,
+            w_values=rng.standard_normal(nnz), loss_name="logistic",
+            c=0.1 * (k + 1),
+            meta={"val_accuracy": 0.7 + 0.02 * k, "nnz": nnz}))
+    if kind == "binary":
+        return ModelFamily(kind="binary", models=(models[0],))
+    return ModelFamily(kind="path", models=tuple(models))
+
+
+def _capacity_rps(loop: ServeLoop) -> float:
+    """Compute-bound ceiling from the warmup-seeded latency model:
+    max_bucket rows per estimated max-bucket call."""
+    slot = loop.stats()["models"][loop.models()[0]]
+    maxb = max(int(b) for b in slot["latency_model_s"])
+    return maxb / slot["latency_model_s"][str(maxb)]
+
+
+def _slot_delta(before: dict, after: dict) -> dict:
+    return {"rows": after["rows"] - before["rows"],
+            "pad_rows": after["pad_rows"] - before["pad_rows"],
+            "flushes": {k: after["flushes"][k] - before["flushes"][k]
+                        for k in after["flushes"]}}
+
+
+def sweep_rates(loop: ServeLoop, X, slo_ms: float, duration_s: float,
+                n_clamp, label: str, seed: int = 0) -> dict:
+    """Drive the rate ladder; returns per-rate rows + max sustained.
+
+    The fixed ladder is anchored at the arm's estimated compute
+    capacity; if its top rung is still sustained the sweep keeps
+    climbing (x1.5 steps, bounded) so the reported max is bracketed by
+    a measured violation, not by where the ladder happened to end.
+    """
+    name = loop.models()[0]
+    budget = BUDGET_FRAC * slo_ms / 1e3
+    anchor = _capacity_rps(loop)
+    rows = []
+
+    def probe(rate, i):
+        # best-of-2: a single ambient scheduler stall on a timeshared
+        # box puts tens of ms into a few hundred samples' p99 — a rate
+        # the server sustains in EITHER attempt is sustainable (the
+        # best-of-N policy of every other bench here, applied to load)
+        attempts = []
+        for a in range(2):
+            n = int(np.clip(rate * duration_s, *n_clamp))
+            before = loop.stats()["models"][name]
+            with _quiesce_gc():
+                drive = drive_poisson(loop, X, rate_rps=rate,
+                                      n_requests=n, model=name,
+                                      budget_s=budget,
+                                      seed=seed + 7 * i + a,
+                                      timeout_s=120.0)
+            drive.pop("results")
+            delta = _slot_delta(before, loop.stats()["models"][name])
+            served = delta["rows"] + delta["pad_rows"]
+            attempts.append(
+                {**drive,
+                 "slo_ms": slo_ms,
+                 "sustained": (drive["p99_s"] is not None
+                               and drive["p99_s"] <= slo_ms / 1e3
+                               and drive["rejects"] == 0),
+                 "padding_efficiency": (delta["rows"] / served
+                                        if served else None),
+                 "flushes": delta["flushes"]})
+            if attempts[-1]["sustained"]:
+                break
+        row = attempts[-1] if attempts[-1]["sustained"] else \
+            min(attempts, key=lambda r: r["p99_s"] or float("inf"))
+        row["attempts"] = len(attempts)
+        rows.append(row)
+        print(f"[{label}] target {rate:.0f} rps -> offered "
+              f"{row['offered_rps']:.0f}, p50 "
+              f"{1e3 * (row['p50_s'] or 0):.2f}ms p99 "
+              f"{1e3 * (row['p99_s'] or 0):.2f}ms rejects "
+              f"{row['rejects']} "
+              f"{'SUSTAINED' if row['sustained'] else 'violated'}",
+              flush=True)
+        return row
+
+    for i, mult in enumerate(RATE_LADDER):
+        probe(anchor * mult, i)
+    rate = anchor * RATE_LADDER[-1]
+    for j in range(4):                       # climb past the ladder top
+        if not rows[-1]["sustained"]:
+            break
+        rate *= 1.5
+        probe(rate, len(RATE_LADDER) + j)
+    rate = anchor * RATE_LADDER[0]
+    for j in range(4):                       # descend below the ladder
+        if any(r["sustained"] for r in rows):
+            break
+        rate /= 1.5
+        probe(rate, 2000 + j)
+    # bisect the sustained/violated boundary: the anchor is a lone warm
+    # call's estimate and can be far from the loaded capacity, leaving
+    # the ladder coarse exactly where the max lives
+    for j in range(3):
+        ok = max((r["target_rps"] for r in rows if r["sustained"]),
+                 default=None)
+        if ok is None:
+            break
+        above = [r["target_rps"] for r in rows
+                 if not r["sustained"] and r["target_rps"] > ok]
+        if not above:
+            break
+        mid = float(np.sqrt(ok * min(above)))
+        if mid < 1.08 * ok:
+            break
+        probe(mid, 1000 + j)
+    sustained = [r["offered_rps"] for r in rows if r["sustained"]]
+    return {"anchor_rps": anchor, "rates": rows,
+            "max_sustained_rps": max(sustained) if sustained else None}
+
+
+def bench_loop_vs_sync(K, n, nnz, max_batch, duration_s, n_clamp, seed=0):
+    fam = make_family(n, nnz, K, seed, kind="path")
+    rng = np.random.default_rng(seed + 1)
+    X = rng.standard_normal((512, n)).astype(np.float32)
+    out = {}
+    for label, buckets in (("sync", (1,)), ("loop", None)):
+        loop = ServeLoop({"m": fam}, buckets=buckets, max_batch=max_batch,
+                         default_budget_s=BUDGET_FRAC * SLO_MS / 1e3,
+                         max_queue=16 * max_batch, route="auto")
+        out[label] = sweep_rates(loop, X, SLO_MS, duration_s, n_clamp,
+                                 label, seed=seed)
+        out[label]["routes"] = \
+            loop.stats()["models"]["m"]["routes"]
+        loop.stop()
+    s, l = out["sync"]["max_sustained_rps"], out["loop"]["max_sustained_rps"]
+    out["headline_speedup"] = (l / s) if (s and l) else None
+    ratio = (f"{out['headline_speedup']:.1f}x"
+             if out["headline_speedup"] else "n/a")
+    print(f"[serve2] HEADLINE continuous batching vs per-request: "
+          f"{(l or 0):.0f} vs {(s or 0):.0f} rows/s sustained at "
+          f"p99<={SLO_MS}ms -> {ratio}", flush=True)
+    return out
+
+
+def bench_hot_swap(n, nnz, max_batch, duration_s, n_swaps, seed=0):
+    """Steady traffic + live best-c swaps: zero recompiles, zero SLO
+    violations, responses spanning every installed version."""
+    prod = make_family(n, nnz, 1, seed, kind="binary")
+    loop = ServeLoop({"prod": prod}, max_batch=max_batch,
+                     default_budget_s=BUDGET_FRAC * SLO_MS / 1e3,
+                     max_queue=16 * max_batch, route="auto")
+    rng = np.random.default_rng(seed + 2)
+    X = rng.standard_normal((256, n)).astype(np.float32)
+    # the single warm call behind _capacity_rps is optimistic about
+    # capacity under a competing generator thread (one core, GIL
+    # timesharing): calibrate the swap-run rate against MEASURED p99 so
+    # the run sits comfortably inside capacity — swap attribution is
+    # meaningless on top of ambient congestion
+    rate = 0.25 * _capacity_rps(loop)
+    for attempt in range(4):
+        with _quiesce_gc():
+            cal = drive_poisson(loop, X, rate_rps=rate,
+                                n_requests=int(np.clip(rate, 200, 2000)),
+                                model="prod",
+                                budget_s=BUDGET_FRAC * SLO_MS / 1e3,
+                                seed=seed + 99 + attempt, timeout_s=120.0)
+        cal.pop("results")
+        # deadline flushing floors e2e latency near the request budget
+        # (0.6 * SLO) at ANY rate — "comfortable" means p99 holds 10%
+        # headroom under the SLO, not some fraction of the budget floor
+        calibrated = (cal["p99_s"] is not None
+                      and cal["p99_s"] <= 0.9 * SLO_MS / 1e3
+                      and cal["rejects"] == 0)
+        print(f"[hot_swap] calibrate {rate:.0f} rps: p99 "
+              f"{1e3 * (cal['p99_s'] or 0):.2f}ms rejects "
+              f"{cal['rejects']} -> {'ok' if calibrated else 'halve'}",
+              flush=True)
+        if calibrated:
+            break
+        rate *= 0.5
+    caches0 = scorer_cache_sizes()
+    slo = SLO_MS / 1e3
+    # swap attribution is meaningless on top of ambient congestion: if
+    # the BACKGROUND (non-swap) tail melts down mid-drive — host noise on
+    # a shared box, not anything the swap did — halve the rate and redo
+    # the whole swap drive rather than report polluted attribution
+    for attempt in range(3):
+        n_req = int(np.clip(rate * duration_s, 200, 20000))
+        windows = []                         # (t_fire, t_installed) pairs
+        tickets = []
+
+        def _fire(delay, swap_seed):
+            time.sleep(delay)
+            fam = make_family(n, nnz, 4, swap_seed, kind="path")
+            t_fire = time.perf_counter()
+            tk = loop.swap(model=fam)          # best-c selected live
+            tk.installed.wait(10.0)
+            tickets.append(tk)
+            windows.append((t_fire, time.perf_counter()))
+
+        span = n_req / rate
+        threads = [threading.Thread(
+            target=_fire,
+            args=((j + 1) * span / (n_swaps + 1), seed + 10 + j),
+            daemon=True) for j in range(n_swaps)]
+        for t in threads:
+            t.start()
+        with _quiesce_gc():
+            drive = drive_poisson(loop, X, rate_rps=rate, n_requests=n_req,
+                                  model="prod",
+                                  budget_s=BUDGET_FRAC * SLO_MS / 1e3,
+                                  seed=seed, timeout_s=120.0)
+        for t in threads:
+            t.join()
+        results = drive.pop("results")
+        slo_violations = sum(r.latency_s > slo for r in results)
+        congested = (drive["rejects"] > 0
+                     or slo_violations > 0.05 * max(len(results), 1))
+        if not congested or attempt == 2:
+            break
+        print(f"[hot_swap] background congestion "
+              f"({slo_violations}/{len(results)} late at {rate:.0f} rps) "
+              f"-> halve and retry", flush=True)
+        rate *= 0.5
+    loop.stop()
+    caches1 = scorer_cache_sizes()
+    versions = sorted({r.version for r in results})
+    # attribution: a violation is the swap's fault only if its response
+    # completed inside a swap window (fire -> installed, + one SLO of
+    # settling); tail spikes elsewhere are background scheduler noise,
+    # reported separately as slo_violations
+    in_window = [r for r in results
+                 if any(t0 <= r.t_done <= t1 + slo for t0, t1 in windows)]
+    swap_window_violations = sum(r.latency_s > slo for r in in_window)
+    out = {"rate_rps": rate, "n_requests": n_req, "n_swaps": n_swaps,
+           "slo_ms": SLO_MS,
+           "installed_versions": sorted(t.version for t in tickets),
+           "response_versions": versions,
+           "recompiles": sum(caches1.values()) - sum(caches0.values()),
+           "slo_violations": int(slo_violations),
+           "swap_window_responses": len(in_window),
+           "swap_window_violations": int(swap_window_violations),
+           "rejects": drive["rejects"],
+           "p99_s": drive["p99_s"]}
+    print(f"[hot_swap] {n_swaps} swaps under {rate:.0f} rps: response "
+          f"versions {versions}, recompiles={out['recompiles']}, "
+          f"swap_window_violations={swap_window_violations} "
+          f"(background {slo_violations} over {n_req}), "
+          f"p99={1e3 * (drive['p99_s'] or 0):.2f}ms", flush=True)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / short drives (CI)")
+    args = ap.parse_args(argv)
+
+    # a single-core box timeshares the load generator and the scheduler
+    # under the GIL; the default 5ms switch interval would add +-10ms of
+    # pure thread-scheduling jitter to every latency sample
+    sys.setswitchinterval(1e-3)
+
+    if args.smoke:
+        K, n, nnz = 4, 2048, 20
+        max_batch, duration_s, n_clamp = 32, 0.6, (50, 2000)
+        n_swaps = 1
+    else:
+        K, n, nnz = 16, 32768, 33           # 0.999 weight sparsity
+        max_batch, duration_s, n_clamp = 256, 2.5, (200, 20000)
+        n_swaps = 2
+
+    payload = {
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "slo_ms": SLO_MS,
+        "budget_frac": BUDGET_FRAC,
+        "bank": {"K": K, "n": n, "nnz_per_model": nnz,
+                 "sparsity": 1.0 - nnz / n, "max_batch": max_batch},
+        **bench_loop_vs_sync(K, n, nnz, max_batch, duration_s, n_clamp),
+        "hot_swap": bench_hot_swap(n, nnz, max_batch, duration_s, n_swaps),
+    }
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    for path in (os.path.join(REPO_ROOT, "BENCH_serve2.json"),
+                 os.path.join(RESULTS_DIR, "BENCH_serve2.json")):
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=1, default=float)
+    print("wrote BENCH_serve2.json")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,35 +1,52 @@
-"""Sparse-model serving subsystem (DESIGN.md section 10).
+"""Sparse-model serving subsystem (DESIGN.md sections 10 and 14).
 
 Training-to-traffic path for the solvers' l1 solutions:
 
   * `serve.artifact`  — versioned on-disk model format (active indices +
     values, loss/c, label vocabulary, solver provenance); a path sweep or
-    an OVR head saves as one multi-model family.
+    an OVR head saves as one multi-model family, with `pick_best_c`
+    selecting a path family's best grid point for serving.
   * `serve.ovr`       — one-vs-rest multiclass training: K binary
     subproblems fitted in ONE vmapped `path.batch.solve_batch` program
     over a shared DesignMatrix.
   * `serve.predict`   — batched-margin prediction engine over the stacked
     active-coordinate `ModelBank`, with Pallas sparse-gather kernels for
-    dense and padded-CSC request layouts.
-  * `serve.batcher`   — microbatching front-end: bucket-padded request
-    batches so steady-state traffic never recompiles, with per-bucket
-    latency/throughput accounting.
+    dense and padded-CSC request layouts, and measured-crossover routing
+    between the union-gather and densified-matmul scorers.
+  * `serve.policy`    — shared bucket geometry (shape quantization) and
+    the per-bucket EWMA latency model behind deadline math.
+  * `serve.batcher`   — synchronous microbatching front-end: one
+    bucket-padded batch per caller round-trip.
+  * `serve.loop`      — continuous-batching serving loop: async request
+    queue, deadline-aware flushing, multi-model routing, zero-downtime
+    hot-swap via capacity-padded banks and donated installs.
 """
 from repro.serve.artifact import (ModelArtifact, ModelFamily, SCHEMA,
                                   artifact_from_solution, load_model,
-                                  path_family, save_model,
+                                  path_family, pick_best_c, save_model,
                                   solver_provenance)
-from repro.serve.batcher import BucketStats, MicroBatcher, default_buckets
+from repro.serve.batcher import BucketStats, MicroBatcher
+from repro.serve.loop import (ServeFuture, ServeLoop, ServeOverload,
+                              ServeResult, SwapCapacityError, drive_poisson)
 from repro.serve.ovr import (OVRResult, encode_labels, fit_ovr, ovr_family,
                              ovr_label_matrix, ovr_margins)
+from repro.serve.policy import BucketPolicy, LatencyModel, default_buckets
 from repro.serve.predict import (ModelBank, decide, margins_dense,
-                                 margins_padded_csc, predict)
+                                 margins_padded_csc, pick_route, predict,
+                                 route_crossover, scorer_cache_sizes,
+                                 set_route_crossover)
 
 __all__ = [
     "SCHEMA", "ModelArtifact", "ModelFamily", "artifact_from_solution",
-    "save_model", "load_model", "path_family", "solver_provenance",
+    "save_model", "load_model", "path_family", "pick_best_c",
+    "solver_provenance",
     "OVRResult", "encode_labels", "fit_ovr", "ovr_family",
     "ovr_label_matrix", "ovr_margins",
     "ModelBank", "margins_dense", "margins_padded_csc", "predict", "decide",
+    "pick_route", "route_crossover", "set_route_crossover",
+    "scorer_cache_sizes",
     "MicroBatcher", "BucketStats", "default_buckets",
+    "BucketPolicy", "LatencyModel",
+    "ServeLoop", "ServeFuture", "ServeResult", "ServeOverload",
+    "SwapCapacityError", "drive_poisson",
 ]

@@ -262,6 +262,40 @@ def family_from_payload(obj: dict, source: str = "<payload>") -> ModelFamily:
                        provenance=obj.get("provenance", {}))
 
 
+def pick_best_c(family: ModelFamily, metric: str = "val_accuracy",
+                ) -> Tuple[int, ModelArtifact]:
+    """Best grid point of a kind="path" family -> (index, artifact).
+
+    Mirrors `path.driver.pick_best` on the SERVED artifact (so hot-swap
+    and `launch.predict --best-c` select exactly what the path CLI would
+    have): maximize `metric` from each member's fit meta, break ties by
+    fewer nonzeros, then by the EARLIER grid point (smaller c — the
+    stronger regularizer). metric="nnz" inverts to "sparsest member"
+    (min nnz, ties -> earlier). Raises if no member records the metric —
+    a family without validation scores has nothing to select on.
+    """
+    if family.kind != "path":
+        raise ValueError(f"pick_best_c selects over a path family, got "
+                         f"kind={family.kind!r}")
+    if metric == "nnz":
+        scored = [(-(m.nnz), -i) for i, m in enumerate(family.models)]
+    else:
+        scored = []
+        for i, m in enumerate(family.models):
+            v = m.meta.get(metric)
+            if v is None:
+                continue
+            scored.append((float(v), -m.nnz, -i))
+        if not scored:
+            raise ValueError(
+                f"no member of the family records meta[{metric!r}] — "
+                f"fit the path with a validation split (launch.path "
+                f"--val-frac) to enable best-c selection")
+    best = max(scored)
+    i = -best[-1]
+    return i, family.models[i]
+
+
 def path_family(weights: np.ndarray, cs: Sequence[float], loss_name: str,
                 metas: Optional[Sequence[dict]] = None,
                 provenance: Optional[dict] = None) -> ModelFamily:

@@ -5,7 +5,16 @@ request batches would recompile constantly. The batcher quantizes every
 batch to a small fixed set of bucket sizes: a pending chunk of r requests
 is padded with empty rows up to the smallest bucket >= r, so after one
 warmup call per bucket, steady-state traffic NEVER recompiles — the
-recompile policy of DESIGN.md section 10.4.
+recompile policy of DESIGN.md section 10.4. The bucket geometry and
+chunk packing live in `serve.policy.BucketPolicy`, shared with the
+continuous-batching `serve.loop.ServeLoop` (DESIGN.md section 14) so
+both fronts pad identically; this class remains the synchronous
+one-batch-at-a-time front-end (and the per-request baseline arm of
+benchmarks/bench_serve2.py).
+
+`route` picks the dense-layout scorer ("sparse" union-gather, "dense"
+densified matmul, or "auto" from the measured crossover table of
+BENCH_serve.json — see serve.predict.pick_route).
 
 Two request layouts:
 
@@ -39,26 +48,12 @@ import dataclasses
 import time
 from typing import Optional, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.core.design_matrix import PaddedCSCDesign, padded_csc_arrays
+from repro.serve.policy import BucketPolicy, default_buckets  # noqa: F401
 from repro.serve.predict import (ModelBank, margins_dense,
                                  margins_padded_csc)
-
-
-def default_buckets(max_batch: int) -> tuple:
-    """Powers of two up to max_batch, always including max_batch itself."""
-    if max_batch < 1:
-        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-    buckets = []
-    b = 1
-    while b < max_batch:
-        buckets.append(b)
-        b *= 2
-    buckets.append(max_batch)
-    return tuple(buckets)
 
 
 @dataclasses.dataclass
@@ -104,36 +99,36 @@ class MicroBatcher:
 
     def __init__(self, bank: ModelBank, buckets: Sequence[int] = None,
                  layout: str = "dense", use_kernels: bool = False,
-                 k_max: Optional[int] = None, max_batch: int = 64):
-        if layout not in ("dense", "padded_csc"):
-            raise ValueError(f"unknown request layout {layout!r}")
-        if layout == "padded_csc" and k_max is None:
-            raise ValueError(
-                "layout='padded_csc' needs a fixed column width k_max "
-                "(e.g. CSRMatrix.max_col_nnz() of the request stream) — "
-                "shape stability is the whole point of bucketing")
+                 k_max: Optional[int] = None, max_batch: int = 64,
+                 route: str = "sparse"):
+        self.policy = BucketPolicy(
+            buckets=tuple(buckets or default_buckets(max_batch)),
+            layout=layout, k_max=k_max)
         self.bank = bank
-        self.layout = layout
         self.use_kernels = use_kernels
-        self.k_max = None if k_max is None else int(k_max)
-        self.buckets = tuple(sorted(set(
-            int(b) for b in (buckets or default_buckets(max_batch)))))
-        if self.buckets[0] < 1:
-            raise ValueError(f"buckets must be >= 1: {self.buckets}")
+        self.route = route
         self._stats = {b: BucketStats(bucket=b) for b in self.buckets}
 
-    # -- bucket geometry -----------------------------------------------------
+    # -- bucket geometry (delegated to the shared BucketPolicy) --------------
+    @property
+    def layout(self) -> str:
+        return self.policy.layout
+
+    @property
+    def k_max(self) -> Optional[int]:
+        return self.policy.k_max
+
+    @property
+    def buckets(self) -> tuple:
+        return self.policy.buckets
+
     @property
     def max_bucket(self) -> int:
-        return self.buckets[-1]
+        return self.policy.max_bucket
 
     def bucket_for(self, r: int) -> int:
         """Smallest bucket >= r (r must not exceed the largest bucket)."""
-        for b in self.buckets:
-            if b >= r:
-                return b
-        raise ValueError(f"chunk of {r} exceeds max bucket "
-                         f"{self.max_bucket}")
+        return self.policy.bucket_for(r)
 
     # -- request plumbing ----------------------------------------------------
     def predict(self, requests) -> np.ndarray:
@@ -162,13 +157,13 @@ class MicroBatcher:
             if X.shape[1] != self.bank.n_features:
                 raise ValueError(f"requests have {X.shape[1]} features, "
                                  f"bank has {self.bank.n_features}")
-            if bucket > r:
-                X = np.concatenate(
-                    [X, np.zeros((bucket - r, X.shape[1]), np.float32)])
+            X = self.policy.pad_dense(X, bucket)
             run = lambda: margins_dense(self.bank, X,
-                                        use_kernels=self.use_kernels)
+                                        use_kernels=self.use_kernels,
+                                        route=self.route)
         else:
-            packed = self._pack_csc(requests, start, stop, bucket)
+            packed = self.policy.pack_csc(requests, start, stop, bucket,
+                                          self.bank.n_features)
             run = lambda: margins_padded_csc(self.bank, packed,
                                              use_kernels=self.use_kernels)
         st = self._stats[bucket]
@@ -202,36 +197,6 @@ class MicroBatcher:
                            "pad_rows": bucket - r, "warmup": not warm})
         return z[:r]
 
-    def _pack_csc(self, csr, start: int, stop: int,
-                  bucket: int) -> PaddedCSCDesign:
-        """Rows [start, stop) of a CSRMatrix -> (bucket, n) padded-CSC.
-
-        Padding rows simply have no nonzeros; the fixed (n, k_max) column
-        width keeps the packed shape identical for every chunk of the
-        same bucket. Overflowing k_max raises (see module docstring).
-        """
-        for a in ("data", "indices", "indptr", "shape"):
-            if not hasattr(csr, a):
-                raise TypeError(
-                    f"padded_csc layout serves CSR request streams; got "
-                    f"{type(csr).__name__} (dense rows go to "
-                    f"layout='dense')")
-        n = csr.shape[1]
-        if n != self.bank.n_features:
-            raise ValueError(f"requests have {n} features, bank has "
-                             f"{self.bank.n_features}")
-        lo, hi = csr.indptr[start], csr.indptr[stop]
-        indptr = np.asarray(csr.indptr[start:stop + 1], np.int64) - lo
-        indptr = np.concatenate(
-            [indptr, np.full((bucket - (stop - start),), indptr[-1],
-                             np.int64)])
-        col_rows, col_vals, s, _ = padded_csc_arrays(
-            csr.data[lo:hi], csr.indices[lo:hi], indptr, (bucket, n),
-            k_max=self.k_max)
-        return PaddedCSCDesign(col_rows=jnp.asarray(col_rows),
-                               col_vals=jnp.asarray(col_vals),
-                               _n_samples=s)
-
     # -- accounting ----------------------------------------------------------
     def stats(self) -> dict:
         per_bucket = [self._stats[b].as_dict() for b in self.buckets
@@ -255,6 +220,7 @@ class MicroBatcher:
         return {
             "layout": self.layout,
             "use_kernels": self.use_kernels,
+            "route": self.route,
             "buckets": per_bucket,
             "total_rows": rows,
             "compiles": len(per_bucket),   # one warmup per bucket shape

@@ -1,0 +1,164 @@
+"""Bucket policy: the shape-quantization contract of serving (DESIGN.md
+sections 10.4 / 14.2).
+
+XLA compiles one program per input SHAPE, so every serving front-end —
+the synchronous `serve.batcher.MicroBatcher` and the continuous-batching
+`serve.loop.ServeLoop` — quantizes request batches to a small fixed set
+of bucket sizes. This module owns that shared geometry so both fronts
+pad identically and a bucket warmed by one is warmed for the process:
+
+  * `BucketPolicy`  — the bucket set, `bucket_for` (smallest bucket that
+    fits), and the padding/packing of a ragged chunk up to its bucket
+    shape (dense zero rows, or fixed-width padded-CSC with empty rows).
+  * `LatencyModel`  — per-bucket EWMA of steady-state compute latency.
+    The serving loop's deadline math needs an estimate of "how long will
+    this bucket take to score" to decide the latest safe flush instant;
+    warmup seeds it, steady-state calls keep it current.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.design_matrix import PaddedCSCDesign, padded_csc_arrays
+
+
+def default_buckets(max_batch: int) -> tuple:
+    """Powers of two up to max_batch, always including max_batch itself."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    buckets = []
+    b = 1
+    while b < max_batch:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_batch)
+    return tuple(buckets)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Bucket geometry + chunk packing, shared by batcher and loop.
+
+    `layout` picks the engine-side request representation ("dense" or
+    "padded_csc"); padded_csc needs the fixed column width `k_max` at
+    construction (shape stability is the whole point of bucketing — a
+    chunk whose column nnz overflows it raises loudly, truncation would
+    silently change margins).
+    """
+
+    buckets: tuple
+    layout: str = "dense"
+    k_max: Optional[int] = None
+
+    def __post_init__(self):
+        if self.layout not in ("dense", "padded_csc"):
+            raise ValueError(f"unknown request layout {self.layout!r}")
+        if self.layout == "padded_csc" and self.k_max is None:
+            raise ValueError(
+                "layout='padded_csc' needs a fixed column width k_max "
+                "(e.g. CSRMatrix.max_col_nnz() of the request stream) — "
+                "shape stability is the whole point of bucketing")
+        bs = tuple(sorted(set(int(b) for b in self.buckets)))
+        if not bs or bs[0] < 1:
+            raise ValueError(f"buckets must be >= 1: {self.buckets}")
+        object.__setattr__(self, "buckets", bs)
+        object.__setattr__(
+            self, "k_max",
+            None if self.k_max is None else int(self.k_max))
+
+    @property
+    def max_bucket(self) -> int:
+        return self.buckets[-1]
+
+    def bucket_for(self, r: int) -> int:
+        """Smallest bucket >= r (r must not exceed the largest bucket)."""
+        for b in self.buckets:
+            if b >= r:
+                return b
+        raise ValueError(f"chunk of {r} exceeds max bucket "
+                         f"{self.max_bucket}")
+
+    # -- chunk packing -------------------------------------------------------
+    def pad_dense(self, X: np.ndarray, bucket: int) -> np.ndarray:
+        """(r, n) float rows -> (bucket, n), zero rows appended (their
+        margins are computed and discarded by the caller)."""
+        X = np.asarray(X, np.float32)
+        r = X.shape[0]
+        if bucket < r:
+            raise ValueError(f"chunk of {r} rows does not fit bucket "
+                             f"{bucket}")
+        if bucket == r:
+            return X
+        return np.concatenate(
+            [X, np.zeros((bucket - r, X.shape[1]), np.float32)])
+
+    def pack_csc(self, csr, start: int, stop: int, bucket: int,
+                 n_features: int) -> PaddedCSCDesign:
+        """Rows [start, stop) of a CSRMatrix -> (bucket, n) padded-CSC.
+
+        Padding rows simply have no nonzeros; the fixed (n, k_max) column
+        width keeps the packed shape identical for every chunk of the
+        same bucket. Overflowing k_max raises (see class docstring).
+        """
+        for a in ("data", "indices", "indptr", "shape"):
+            if not hasattr(csr, a):
+                raise TypeError(
+                    f"padded_csc layout serves CSR request streams; got "
+                    f"{type(csr).__name__} (dense rows go to "
+                    f"layout='dense')")
+        n = csr.shape[1]
+        if n != n_features:
+            raise ValueError(f"requests have {n} features, bank has "
+                             f"{n_features}")
+        lo, hi = csr.indptr[start], csr.indptr[stop]
+        indptr = np.asarray(csr.indptr[start:stop + 1], np.int64) - lo
+        indptr = np.concatenate(
+            [indptr, np.full((bucket - (stop - start),), indptr[-1],
+                             np.int64)])
+        col_rows, col_vals, s, _ = padded_csc_arrays(
+            csr.data[lo:hi], csr.indices[lo:hi], indptr, (bucket, n),
+            k_max=self.k_max)
+        return PaddedCSCDesign(col_rows=jnp.asarray(col_rows),
+                               col_vals=jnp.asarray(col_vals),
+                               _n_samples=s)
+
+
+class LatencyModel:
+    """Per-bucket EWMA estimate of steady-state compute latency.
+
+    The serving loop's deadline-aware flush needs `estimate(bucket)` to
+    compute the latest instant a pending chunk can still be flushed and
+    meet its oldest request's deadline (DESIGN.md 14.3). Warmup seeds
+    each bucket with a measured post-compile call; steady-state calls
+    update the EWMA so the estimate tracks machine load. Unseen buckets
+    fall back to `default_s` (conservative, so unwarmed servers flush
+    early rather than late).
+    """
+
+    def __init__(self, default_s: float = 5e-3, alpha: float = 0.3):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.default_s = float(default_s)
+        self.alpha = float(alpha)
+        self._est: Dict[int, float] = {}
+
+    def observe(self, bucket: int, seconds: float) -> None:
+        old = self._est.get(bucket)
+        if old is None:
+            self._est[bucket] = float(seconds)
+        else:
+            self._est[bucket] = (1.0 - self.alpha) * old \
+                + self.alpha * float(seconds)
+
+    def estimate(self, bucket: int) -> float:
+        return self._est.get(bucket, self.default_s)
+
+    def seeded(self, bucket: int) -> bool:
+        return bucket in self._est
+
+    def as_dict(self) -> dict:
+        return {str(b): e for b, e in sorted(self._est.items())}
