@@ -1,0 +1,170 @@
+"""Perf-regression sentinel over the committed BENCH_*.json artifacts.
+
+    PYTHONPATH=src python benchmarks/sentinel.py [--root DIR] [--strict]
+
+Every benchmark writes a repo-root BENCH_*.json with a headline number
+(speedup, overhead, agreement bool). Those artifacts are committed, so
+the repo's performance story is versioned — but nothing ever *checked*
+them. This gate does: each headline key is compared against a declared
+floor (or ceiling), chosen well below the measured values so machine
+variance does not flap the gate while a real regression (a speedup
+collapsing toward 1x, an overhead blowing past its budget, a tuned
+kernel losing to the default launch) fails CI loudly.
+
+The sentinel also writes `benchmarks/results/BENCH_trajectory.json`
+aggregating every committed artifact's headline numbers into one
+record — the cross-PR performance trajectory in a single file.
+
+Missing artifacts are reported and skipped (exit 0) unless `--strict`,
+which CI uses for the artifacts the repo is expected to carry.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results")
+
+# (artifact, dotted key path, op, floor/ceiling, note)
+# Floors sit ~2-3x below the committed measurements (see note) so the
+# gate trips on regressions, not on machine variance.
+CHECKS = [
+    ("BENCH_serve.json", "speedup_at_ge_099", ">=", 2.0,
+     "sparse scorer vs dense matmul at 0.999 sparsity (measured ~7.4x)"),
+    ("BENCH_serve2.json", "headline_speedup", ">=", 2.0,
+     "continuous batching vs per-request dispatch (measured ~6.5x)"),
+    ("BENCH_obs.json", "solve.overhead_pct", "<=", 5.0,
+     "telemetry-enabled solve overhead budget"),
+    ("BENCH_obs.json", "batcher.overhead_pct", "<=", 5.0,
+     "telemetry-enabled batcher overhead budget"),
+    ("BENCH_kernels.json", "headline.all_tuned_at_least_default", "==",
+     True, "autotuned launches must never lose to the defaults"),
+    ("BENCH_kernels.json", "headline.best_speedup", ">=", 1.5,
+     "best tuned-vs-default kernel speedup (measured ~5.3x)"),
+    ("BENCH_bundle.json", "linesearch_speedup_at_0999", ">=", 2.0,
+     "support-restricted line search at 0.999 sparsity (measured ~5.2x)"),
+    ("BENCH_bundle.json", "bundle_step_speedup_at_0999", ">=", 1.5,
+     "support-restricted bundle step at 0.999 sparsity (measured ~3.1x)"),
+    ("BENCH_engine.json", "speedup_engine_vs_cold_solves", ">=", 2.0,
+     "sharded warm+shrink sweep vs cold solves (measured ~4.9x)"),
+    ("BENCH_path.json", "warm_vs_cold.speedup_engine_vs_cold_solves",
+     ">=", 1.5, "warm-started shrinking sweep vs cold (measured ~3.8x)"),
+    ("BENCH_diag.json", "attribution.overhead_pct", "<=", 5.0,
+     "per-feature KKT attribution overhead budget"),
+    ("BENCH_diag.json", "safep.agreement", "==", True,
+     "power-iteration rho must agree with direct eigenvalues"),
+]
+
+
+def get_path(obj, dotted: str):
+    cur = obj
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(dotted)
+        cur = cur[part]
+    return cur
+
+
+def check_one(value, op: str, bound):
+    if op == ">=":
+        return float(value) >= float(bound)
+    if op == "<=":
+        return float(value) <= float(bound)
+    if op == "==":
+        return value == bound
+    raise ValueError(f"unknown op {op!r}")
+
+
+def run(root: str, strict: bool = False, out_dir: str = RESULTS_DIR):
+    """-> (exit_status, results list, trajectory dict)."""
+    loaded: dict = {}
+    results = []
+    status = 0
+    for fname, key, op, bound, note in CHECKS:
+        path = os.path.join(root, fname)
+        if fname not in loaded:
+            if os.path.exists(path):
+                try:
+                    with open(path) as fh:
+                        loaded[fname] = json.load(fh)
+                except (OSError, json.JSONDecodeError) as exc:
+                    loaded[fname] = exc
+            else:
+                loaded[fname] = None
+        obj = loaded[fname]
+        row = {"artifact": fname, "key": key, "op": op, "bound": bound,
+               "note": note}
+        if obj is None:
+            row.update(status="MISSING", value=None)
+            if strict:
+                status = 1
+        elif isinstance(obj, Exception):
+            row.update(status="UNREADABLE", value=None, error=str(obj))
+            status = 1
+        else:
+            try:
+                value = get_path(obj, key)
+            except KeyError:
+                row.update(status="NO_KEY", value=None)
+                status = 1
+            else:
+                ok = check_one(value, op, bound)
+                row.update(status="OK" if ok else "FAIL", value=value)
+                if not ok:
+                    status = 1
+        results.append(row)
+        tag = row["status"]
+        val = row["value"]
+        val_s = f"{val:.4g}" if isinstance(val, float) else str(val)
+        print(f"[sentinel] {tag:9s} {fname}:{key} = {val_s} "
+              f"(want {op} {bound})")
+
+    # cross-PR trajectory: every committed artifact's checked headline
+    # values in one aggregate record
+    trajectory = {"root": os.path.abspath(root), "artifacts": {}}
+    for fname, obj in sorted(loaded.items()):
+        if obj is None or isinstance(obj, Exception):
+            continue
+        heads = {}
+        for f2, key, _op, _bound, _note in CHECKS:
+            if f2 != fname:
+                continue
+            try:
+                heads[key] = get_path(obj, key)
+            except KeyError:
+                pass
+        entry = {"headlines": heads}
+        if isinstance(obj, dict) and "backend" in obj:
+            entry["backend"] = obj["backend"]
+        trajectory["artifacts"][fname] = entry
+    trajectory["checks"] = results
+    trajectory["status"] = "pass" if status == 0 else "fail"
+    os.makedirs(out_dir, exist_ok=True)
+    out = os.path.join(out_dir, "BENCH_trajectory.json")
+    with open(out, "w") as fh:
+        json.dump(trajectory, fh, indent=1, default=float)
+    print(f"[sentinel] trajectory -> {out}")
+    n_ok = sum(1 for r in results if r["status"] == "OK")
+    print(f"[sentinel] {n_ok}/{len(results)} checks OK -> "
+          f"{'PASS' if status == 0 else 'FAIL'}")
+    return status, results, trajectory
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=REPO_ROOT,
+                    help="directory holding the BENCH_*.json artifacts "
+                         "(default: the repo root)")
+    ap.add_argument("--strict", action="store_true",
+                    help="missing artifacts fail the gate (CI mode)")
+    args = ap.parse_args(argv)
+    status, _, _ = run(args.root, strict=args.strict)
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

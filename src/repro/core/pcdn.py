@@ -73,6 +73,16 @@ class PCDNConfig:
     # uninstrumented solver; the engine host loop folds the arrays into
     # SolveHistory.bundle_q / bundle_alpha at its per-iteration sync.
     record_aux: bool = False
+    # -- diagnostics (DESIGN.md section 15.1) --------------------------------
+    # surface the per-feature KKT violation vector (n,) as an extra outer
+    # output for attribution (top-k offenders, distribution, churn). The
+    # vector is already computed for the stop criterion, so the marginal
+    # device cost is one (n,) transfer per iteration. Same contract as
+    # record_aux: off by default, compiled step byte-identical when off.
+    # The engine host loop dispatches extra outputs structurally — a
+    # 2-tuple is the (q, alpha) bundle aux, a bare array is this vector —
+    # so the two flags compose in any combination.
+    record_kkt_vec: bool = False
 
 
 def cdn_config(**kw) -> PCDNConfig:
@@ -279,6 +289,11 @@ def make_path_outer(problem: L1Problem, cfg: PCDNConfig):
     the per-bundle backtrack depth and accepted step of this iteration
     (DESIGN.md section 13.2). Under shrinking, slots past the dynamic
     bundle count b_active hold sentinels q == -1 / alpha == nan.
+
+    With cfg.record_kkt_vec=True the per-feature violation vector (n,)
+    is appended after the optional aux tuple (DESIGN.md section 15.1);
+    the engine dispatches extras by structure (tuple vs bare array), so
+    both flags compose.
     """
     n = problem.n_features
 
@@ -331,7 +346,9 @@ def make_path_outer(problem: L1Problem, cfg: PCDNConfig):
         n_active = jnp.sum(active.astype(jnp.int32))
         base = (w, z, key, f, kkt, nnz, mean_q, active, n_active)
         if cfg.record_aux:
-            return base + ((qs, alphas),)
+            base = base + ((qs, alphas),)
+        if cfg.record_kkt_vec:
+            base = base + (viol,)
         return base
 
     return jax.jit(outer)

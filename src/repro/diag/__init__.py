@@ -1,0 +1,49 @@
+"""Solver-health diagnostics (DESIGN.md section 15).
+
+The observability layer (repro.obs, DESIGN.md section 13) produces raw
+telemetry — metrics records, traces, per-bundle (q, alpha) aux and the
+opt-in per-feature KKT violation series. This package *interprets* it:
+
+* `diag.kkt`       — per-feature KKT attribution: top-k offender tables,
+                     violation distributions, active-set churn.
+* `diag.forensics` — backtrack forensics: per-bundle depth heatmaps and
+                     the divergence post-mortem the engine attaches to
+                     `SolveResult.postmortem` when the guard trips.
+* `diag.safep`     — certified safe parallelism: power-iteration
+                     spectral radius of the normalized Gram matrix
+                     (Bradley et al., arXiv 1105.5379) and the ω-based
+                     ESO bound (Fercoq–Richtárik, arXiv 1309.5885),
+                     both straight off the DesignMatrix.
+* `diag.report`    — assembles everything into one markdown health
+                     report (`python -m repro.diag.report`; `--diag-out`
+                     on the solve/path CLIs).
+
+Layering: diag consumes engine/core/obs and is consumed only by launch
+and benchmarks; the single upward reference is the engine's local import
+of `forensics.divergence_postmortem` on the divergence-trip path.
+"""
+from repro.diag import forensics, kkt, safep  # noqa: F401
+from repro.diag.forensics import backtrack_heatmap, divergence_postmortem
+from repro.diag.kkt import attribution
+from repro.diag.safep import certify
+
+__all__ = [
+    "kkt", "forensics", "safep", "report",
+    "attribution", "backtrack_heatmap", "divergence_postmortem",
+    "certify", "build_payload", "render_markdown",
+]
+
+
+def __getattr__(name):
+    # `report` loads lazily so `python -m repro.diag.report` does not
+    # trip the runpy found-in-sys.modules warning on its own parent
+    # package import.
+    if name in ("report", "build_payload", "render_markdown"):
+        import importlib
+        # importlib, not `from repro.diag import report` — the from-form
+        # re-enters this __getattr__ through _handle_fromlist and recurses
+        _report = importlib.import_module("repro.diag.report")
+        if name == "report":
+            return _report
+        return getattr(_report, name)
+    raise AttributeError(f"module 'repro.diag' has no attribute {name!r}")

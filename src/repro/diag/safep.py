@@ -1,0 +1,151 @@
+"""Certified safe parallelism (DESIGN.md section 15.3).
+
+PCDN's bundle size P is a raw knob: too large and the parallel updates
+fight (deep backtracks, then the divergence guard). Two theory lines
+certify a safe P directly from data quantities the repo already holds:
+
+* **Spectral (Bradley et al., arXiv 1105.5379 — Shotgun).** With
+  unit-normalized columns, parallel coordinate descent is
+  near-guaranteed up to P* ≈ n / ρ where ρ is the spectral radius of
+  the normalized Gram matrix M = D^{-1/2} X'X D^{-1/2},
+  D = diag(‖x_j‖²). ρ ∈ [1, n]: orthogonal designs give ρ = 1
+  (every coordinate independent → P* = n); perfectly correlated ones
+  give ρ = n (P* = 1). M is PSD, so its spectral radius is its top
+  eigenvalue and plain power iteration on matvec/rmatvec converges —
+  no dense Gram is ever formed, so this runs at padded-CSC scale.
+
+* **ESO (Fercoq–Richtárik, arXiv 1309.5885).** For uniform τ-nice
+  sampling, β(τ) = 1 + (τ-1)(ω-1)/(n-1) is an expected separable
+  overapproximation parameter, where ω is the max number of features
+  any single sample touches — sitting in the padded-CSC row metadata.
+  The largest τ with β(τ) ≤ β_max is certified convergent with step
+  scaling 1/β_max; β_max = 2 matches the classical "halved steps are
+  always safe" operating point.
+
+`certify(design)` reports both and `P_cert = max` of the two (each is a
+*sufficient* condition under its own sampling model, so the best one
+stands). The report renders it next to the observed divergence-free P.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _col_scale(design) -> np.ndarray:
+    """1/‖x_j‖ per column with zeros for empty columns (which contribute
+    a zero eigendirection, not a division blow-up)."""
+    d = np.asarray(design.column_norms_sq(), np.float64)
+    scale = np.zeros_like(d)
+    np.divide(1.0, np.sqrt(d), out=scale, where=d > 0)
+    return scale
+
+
+def power_iteration_rho(design, n_iter: int = 1000, tol: float = 1e-9,
+                        seed: int = 0) -> dict:
+    """Top eigenvalue of the normalized Gram M = D^{-1/2} X'X D^{-1/2}.
+
+    One matvec + one rmatvec per step through the DesignMatrix protocol
+    (dense or padded-CSC — never densifies), Rayleigh-quotient estimate,
+    stop at relative change <= tol. Deterministic start from `seed`.
+    """
+    n = design.n_features
+    scale = _col_scale(design)
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal(n)
+    v /= np.linalg.norm(v)
+    rho_prev = 0.0
+    converged = False
+    it = 0
+    for it in range(1, n_iter + 1):
+        u = np.asarray(design.matvec(jnp.asarray(v * scale, jnp.float32)),
+                       np.float64)
+        mv = scale * np.asarray(design.rmatvec(jnp.asarray(u, jnp.float32)),
+                                np.float64)
+        rho = float(v @ mv)                      # Rayleigh quotient
+        nrm = np.linalg.norm(mv)
+        if nrm == 0.0:                           # X == 0: rho is 0
+            rho, converged = 0.0, True
+            break
+        v = mv / nrm
+        if abs(rho - rho_prev) <= tol * max(abs(rho), 1.0):
+            converged = True
+            rho_prev = rho
+            break
+        rho_prev = rho
+    return {"rho": float(rho_prev), "n_iter": int(it),
+            "converged": bool(converged)}
+
+
+def omega_row_support(design) -> int:
+    """ω = max features any single sample touches (max per-row nnz).
+
+    Padded-CSC: histogram the col_rows ids, excluding the sentinel
+    (== n_samples) padding slots AND explicit zero values (a stored zero
+    exerts no coupling). Dense: count nonzeros per row.
+    """
+    layout = getattr(design, "layout", "dense")
+    if layout == "padded_csc":
+        rows = np.asarray(design.col_rows).ravel()
+        vals = np.asarray(design.col_vals, np.float64).ravel()
+        keep = (rows != design.n_samples) & (vals != 0.0)
+        if not np.any(keep):
+            return 0
+        return int(np.bincount(rows[keep],
+                               minlength=design.n_samples).max())
+    X = np.asarray(design.X)
+    if X.size == 0:
+        return 0
+    return int(np.max(np.sum(X != 0, axis=1)))
+
+
+def eso_safe_p(omega: int, n_features: int, beta_max: float = 2.0) -> int:
+    """Largest τ with β(τ) = 1 + (τ-1)(ω-1)/(n-1) <= beta_max.
+
+    ω <= 1 means no sample couples two features — every coordinate is
+    independent and τ = n is safe. n == 1 is trivially τ = 1.
+    """
+    n = int(n_features)
+    if n <= 1:
+        return max(n, 1)
+    if omega <= 1:
+        return n
+    tau = 1.0 + (float(beta_max) - 1.0) * (n - 1) / (omega - 1)
+    return int(np.clip(np.floor(tau), 1, n))
+
+
+def spectral_safe_p(rho: float, n_features: int) -> int:
+    """Shotgun's P* = n / ρ (ρ of the column-normalized Gram)."""
+    n = int(n_features)
+    if rho <= 0.0:
+        return n
+    return int(np.clip(np.floor(n / rho), 1, n))
+
+
+def certify(design, beta_max: float = 2.0, n_iter: int = 1000,
+            tol: float = 1e-9, seed: int = 0,
+            observed_p: Optional[int] = None) -> dict:
+    """The full certified-parallelism record the health report renders.
+
+    `P_cert` is the best (largest) of the two certified bounds;
+    `observed_p` — the P a solve actually ran divergence-free — rides
+    along for the report's certified-vs-observed comparison.
+    """
+    power = power_iteration_rho(design, n_iter=n_iter, tol=tol, seed=seed)
+    omega = omega_row_support(design)
+    n = int(design.n_features)
+    p_spec = spectral_safe_p(power["rho"], n)
+    p_eso = eso_safe_p(omega, n, beta_max)
+    out = {"n_samples": int(design.n_samples), "n_features": n,
+           "rho_normalized": power["rho"],
+           "power_iters": power["n_iter"],
+           "power_converged": power["converged"],
+           "P_spectral": p_spec,
+           "omega": int(omega), "beta_max": float(beta_max),
+           "P_eso": p_eso,
+           "P_cert": max(p_spec, p_eso)}
+    if observed_p is not None:
+        out["observed_P"] = int(observed_p)
+    return out

@@ -72,6 +72,12 @@ class SolveHistory(NamedTuple):
     # (the shrinking solver's unused trailing slots).
     bundle_q: Optional[np.ndarray] = None       # (K, b) int32
     bundle_alpha: Optional[np.ndarray] = None   # (K, b)
+    # per-feature KKT attribution series (DESIGN.md section 15.1):
+    # present only with record_kkt_vec=True — the outer then also
+    # returns the (n,) per-feature violation vector (the same
+    # kkt_violation_from_grad the scalar stop reduces), harvested at
+    # the per-iteration host sync into a (K, n) array.
+    kkt_vec: Optional[np.ndarray] = None        # (K, n)
 
 
 class SolveResult(NamedTuple):
@@ -81,6 +87,11 @@ class SolveResult(NamedTuple):
     converged: bool
     history: SolveHistory
     diverged: bool = False     # only set by solvers with a divergence guard
+    # divergence post-mortem (DESIGN.md section 15.2): attached when the
+    # divergence guard trips — which iterations/bundles drove the deep
+    # backtracks and how alpha collapsed, from whatever series the run
+    # recorded (richer with record_aux). None on non-diverged solves.
+    postmortem: Optional[dict] = None
 
 
 class ExecutionBackend(Protocol):
@@ -124,15 +135,29 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
     wall-clock recording. Returns (state, SolveResult).
 
     divergence_guard(f) -> True aborts the loop and flags the result as
-    diverged (SCDN's Hogwild semantics); converged stays False.
+    diverged (SCDN's Hogwild semantics); converged stays False. On a
+    trip the result carries a `postmortem` dict (repro.diag.forensics)
+    built from the recorded series — richer when the backend also
+    recorded per-bundle aux.
 
-    An outer returning a 10th output — per-bundle (q (b,), alpha (b,))
-    device arrays, the `record_aux` contract of DESIGN.md section 13.2
-    — gets them harvested into `SolveHistory.bundle_q/bundle_alpha`
-    (and, when the metrics registry is enabled, into the
-    solver.bundle_q / solver.bundle_alpha histograms) at the same host
-    sync that reads f/kkt. A 9-tuple outer records exactly the history
-    it always did.
+    Outputs past the 9-tuple are dispatched STRUCTURALLY, so the two
+    opt-in device-aux planes compose in any combination:
+
+      * a 2-tuple of arrays — per-bundle (q (b,), alpha (b,)), the
+        `record_aux` contract of DESIGN.md section 13.2 — harvested
+        into `SolveHistory.bundle_q/bundle_alpha` (and, when the
+        metrics registry is enabled, into the solver.bundle_q /
+        solver.bundle_alpha histograms) at the same host sync that
+        reads f/kkt.
+      * a single array — the (n,) per-feature KKT violation vector,
+        the `record_kkt_vec` contract of DESIGN.md section 15.1 —
+        harvested into `SolveHistory.kkt_vec`.
+
+    A 9-tuple outer records exactly the history it always did.
+
+    callback(k, w, f, kkt, mean_q) fires after every iteration's host
+    sync (mean_q is the iteration's mean line-search depth — the
+    `--progress` CLI consumes it).
     """
     w, z, key, active = state
     c_arr = jnp.asarray(c, w.dtype)
@@ -141,8 +166,10 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
     hist = {k: [] for k in base_fields}
     aux_q: list = []
     aux_alpha: list = []
+    kkt_rows: list = []
     t0 = time.perf_counter()
     converged = diverged = False
+    postmortem = None
     f = float("nan")
     prev_active = None
     k = 0
@@ -154,7 +181,12 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
         t_iter = time.perf_counter_ns()
         out = outer(w, z, key, active, recheck, c_arr)
         w, z, key, f_, kkt, nnz, mean_q, active, n_active = out[:9]
-        aux = out[9] if len(out) > 9 else None
+        aux = kkt_vec = None
+        for extra in out[9:]:
+            if isinstance(extra, tuple):
+                aux = extra
+            else:
+                kkt_vec = extra
         # sync BEFORE timestamping: float(f_) below only blocks on f_,
         # and a backend dispatching asynchronously would otherwise get
         # this iteration's device time attributed to a later row
@@ -183,6 +215,8 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
                                  bounds=obs.Q_BOUNDS)
                 obs.observe_many("solver.bundle_alpha", a_np[ran],
                                  bounds=obs.ALPHA_BOUNDS)
+        if kkt_vec is not None:
+            kkt_rows.append(np.asarray(kkt_vec))
         if obs.metrics_enabled():
             obs.inc("solver.outer_iters")
             obs.observe("solver.iter_seconds", (t_now - t_iter) / 1e9)
@@ -202,12 +236,29 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
                            "mean_q": float(mean_q),
                            "n_active": n_active_i})
         if callback is not None:
-            callback(k, w, f, kkt_f)
+            callback(k, w, f, kkt_f, float(mean_q))
         if divergence_guard is not None and divergence_guard(f):
             diverged = True
             obs.inc("solver.divergence_trips")
             obs.instant("engine.divergence_guard", "engine",
                         args={"k": k, "objective": f})
+            # divergence post-mortem (DESIGN.md section 15.2): built
+            # from the rows recorded so far, richer when per-bundle aux
+            # rode along. Local import — diag consumes the engine, so a
+            # top-level import would close the layering cycle.
+            from repro.diag import forensics
+            postmortem = forensics.divergence_postmortem(
+                objective=np.asarray(hist["objective"]),
+                kkt=np.asarray(hist["kkt"]),
+                ls_steps=np.asarray(hist["ls_steps"]),
+                bundle_q=np.asarray(aux_q) if aux_q else None,
+                bundle_alpha=np.asarray(aux_alpha) if aux_alpha else None)
+            obs.instant("engine.divergence_postmortem", "engine",
+                        args={"k": k,
+                              "objective_growth":
+                                  postmortem["objective_growth"],
+                              "deepest_mean_q":
+                                  postmortem["deepest_mean_q"]})
             break
         if kkt_f <= tol_kkt:
             converged = True
@@ -219,10 +270,11 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
     history = SolveHistory(
         **{k_: np.asarray(v) for k_, v in hist.items()},
         bundle_q=np.asarray(aux_q) if aux_q else None,
-        bundle_alpha=np.asarray(aux_alpha) if aux_alpha else None)
+        bundle_alpha=np.asarray(aux_alpha) if aux_alpha else None,
+        kkt_vec=np.asarray(kkt_rows) if kkt_rows else None)
     result = SolveResult(w=w, objective=f, n_outer=k + 1,
                          converged=converged, history=history,
-                         diverged=diverged)
+                         diverged=diverged, postmortem=postmortem)
     return EngineState(w, z, key, active), result
 
 

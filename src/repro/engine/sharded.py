@@ -116,6 +116,14 @@ class ShardedPCDNConfig:
     # Armijo vector), so they are replicated and leave the shard_map
     # with P() out_specs — no extra collectives.
     record_aux: bool = False
+    # -- diagnostics (DESIGN.md section 15.1; same contract as
+    # PCDNConfig.record_kkt_vec): surface the per-feature KKT violation
+    # vector as an extra outer output for attribution. `viol` is (n_local,)
+    # per model shard and already replicated over data axes (it derives
+    # from the data-psummed gradient), so it exits the shard_map with a
+    # P(model_axis) spec and concatenates to the global (n_pad,) vector —
+    # padded columns carry exactly zero violation (w == 0, g == 0).
+    record_kkt_vec: bool = False
 
     @property
     def all_axes(self):
@@ -146,7 +154,9 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
     traced scalars. With cfg.record_aux a 10th output (q (b,), alpha
     (b,)) carries the per-bundle line-search telemetry (DESIGN.md
     section 13.2); under shrinking, slots past the pmax trip count hold
-    sentinels q == -1 / alpha == nan.
+    sentinels q == -1 / alpha == nan. With cfg.record_kkt_vec the
+    per-feature violation vector (n_pad,) follows the aux tuple
+    (DESIGN.md section 15.1); extras are dispatched by structure.
     """
     loss = get_loss(cfg.loss_name)
     gamma = cfg.armijo.gamma
@@ -457,7 +467,9 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
         if cfg.record_aux:
             # q/alpha come out of the all-axes phase-3 psum: replicated
             # on every shard, so they exit the shard_map with P() specs.
-            return base + ((aux_q, aux_alpha),)
+            base = base + ((aux_q, aux_alpha),)
+        if cfg.record_kkt_vec:
+            base = base + (viol,)
         return base
 
     dspec = _dspec(cfg)
@@ -481,6 +493,9 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
                  P(model_axis), P())
     if cfg.record_aux:
         out_specs = out_specs + ((P(), P()),)
+    if cfg.record_kkt_vec:
+        # viol is (n_local,) per model shard, replicated over data axes
+        out_specs = out_specs + (P(model_axis),)
 
     mapped = _shard_map(
         outer_local, mesh=mesh,
@@ -494,9 +509,9 @@ def make_sharded_outer(cfg: ShardedPCDNConfig, mesh: Mesh,
         out = mapped(*design_y, w, z, active, sub, recheck, c)
         w, z, f, kkt, nnz, mean_q, active, n_active = out[:8]
         base = (w, z, key, f, kkt, nnz, mean_q, active, n_active)
-        if cfg.record_aux:
-            return base + (out[8],)
-        return base
+        # pass extras (aux tuple and/or kkt vector) through in protocol
+        # order; the engine host loop dispatches them by structure.
+        return base + tuple(out[8:])
 
     return jax.jit(outer)
 

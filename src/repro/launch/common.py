@@ -123,6 +123,67 @@ def add_obs_args(ap: argparse.ArgumentParser):
                          "validate with `python -m repro.obs.validate`")
 
 
+def add_diag_args(ap: argparse.ArgumentParser):
+    """Diagnostics flags, identical in the solve / path CLIs
+    (README "Diagnostics"; DESIGN.md section 15)."""
+    ap.add_argument("--diag-out", default=None, metavar="MD",
+                    help="write a markdown solver-health report here "
+                         "(top-k KKT offenders, backtrack forensics, "
+                         "certified-P table); turns on the per-feature "
+                         "KKT attribution harvest (record_kkt_vec) and "
+                         "the per-bundle aux for this run")
+    ap.add_argument("--progress", action="store_true",
+                    help="live one-line solve status on stderr (iter, "
+                         "objective, KKT, mean_q); off by default so CI "
+                         "logs stay clean")
+
+
+def make_progress_callback(args):
+    """The engine callback behind `--progress`: one stderr status line,
+    rewritten in place (carriage return, no scroll). Returns None when
+    the flag is off so the engine loop skips the call entirely."""
+    if not getattr(args, "progress", False):
+        return None
+    import sys
+
+    def cb(k, w, f, kkt, mean_q):
+        print(f"\r[progress] iter {k:4d}  F={f:.6f}  kkt={kkt:.3e}  "
+              f"mean_q={mean_q:5.2f}", end="", file=sys.stderr, flush=True)
+    return cb
+
+
+def finish_progress(args) -> None:
+    """Terminate the in-place `--progress` line before normal output."""
+    if getattr(args, "progress", False):
+        import sys
+        print(file=sys.stderr, flush=True)
+
+
+def write_diag(args, report: dict, design=None, tol_kkt=None) -> None:
+    """Render the `--diag-out` health report (DESIGN.md section 15.4).
+
+    `report` is the same payload `--out` writes (history + provenance +
+    optional postmortem); when `design` is given the certified-P table
+    is computed here — the CLI already holds the design matrix, so the
+    report never reloads the dataset.
+    """
+    if not getattr(args, "diag_out", None):
+        return
+    from repro import diag
+    safep_record = None
+    if design is not None:
+        safep_record = diag.safep.certify(
+            design, seed=getattr(args, "seed", 0),
+            observed_p=getattr(args, "P", None))
+        report.setdefault("diag", {})["safep"] = safep_record
+    payload = diag.build_payload(report=report,
+                                 safep_record=safep_record,
+                                 tol_kkt=tol_kkt)
+    with open(args.diag_out, "w") as fh:
+        fh.write(diag.render_markdown(payload))
+    print(f"[diag] health report written to {args.diag_out}")
+
+
 def setup_obs(args) -> None:
     """Switch the telemetry planes on per the CLI flags (before any
     instrumented work runs)."""
@@ -175,17 +236,26 @@ def build_pcdn_config(args, **overrides) -> PCDNConfig:
               use_kernels=args.use_kernels,
               ls_scope=getattr(args, "ls_scope", "auto"),
               dtype=DTYPE_NAMES[getattr(args, "dtype", "fp32")],
-              record_aux=_record_aux(args))
+              record_aux=_record_aux(args),
+              record_kkt_vec=_record_kkt_vec(args))
     kw.update(overrides)
     return PCDNConfig(**kw)
 
 
 def _record_aux(args) -> bool:
     """Per-bundle (q, alpha) aux outputs ride along exactly when the CLI
-    asked for telemetry — without the flags the compiled iteration stays
-    byte-identical to the uninstrumented solver (DESIGN.md 13.2)."""
+    asked for telemetry OR diagnostics (the health report's backtrack
+    forensics consume them) — without the flags the compiled iteration
+    stays byte-identical to the uninstrumented solver (DESIGN.md 13.2)."""
     return bool(getattr(args, "metrics_out", None)
-                or getattr(args, "trace_out", None))
+                or getattr(args, "trace_out", None)
+                or getattr(args, "diag_out", None))
+
+
+def _record_kkt_vec(args) -> bool:
+    """Per-feature KKT attribution rides along exactly when `--diag-out`
+    asked for a health report (DESIGN.md section 15.1)."""
+    return bool(getattr(args, "diag_out", None))
 
 
 def build_sharded_config(args, c: float, loss: str) -> ShardedPCDNConfig:
@@ -196,7 +266,8 @@ def build_sharded_config(args, c: float, loss: str) -> ShardedPCDNConfig:
         loss_name=loss, seed=args.seed, shrink=args.shrink,
         use_kernels=args.use_kernels, tol_kkt=args.tol,
         ls_scope=getattr(args, "ls_scope", "auto"),
-        record_aux=_record_aux(args))
+        record_aux=_record_aux(args),
+        record_kkt_vec=_record_kkt_vec(args))
 
 
 def make_backend(args, X, y, c: float, loss: str, outer=None):

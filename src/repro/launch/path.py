@@ -74,6 +74,7 @@ def main(argv=None):
                          "artifact family — every grid point becomes a "
                          "servable model (DESIGN.md section 10.1)")
     common.add_obs_args(ap)
+    common.add_diag_args(ap)
     args = ap.parse_args(argv)
     if args.mode == "batch" and args.shrink:
         ap.error("--shrink requires --mode sweep (the vmapped batch "
@@ -81,6 +82,9 @@ def main(argv=None):
     if args.mode == "batch" and args.backend == "sharded":
         ap.error("--mode batch is local-only (the vmapped batch solver "
                  "has no sharded execution backend yet)")
+    if args.mode == "batch" and args.diag_out:
+        ap.error("--diag-out requires --mode sweep (the lockstep batch "
+                 "engine keeps no per-iteration history)")
     common.check_dtype_envelope(args, ap, loss=args.loss)
 
     X, y, Xval, yval = _load(args)
@@ -124,7 +128,9 @@ def main(argv=None):
                          span=args.span, c_final=args.c_final,
                          warm_start=not args.cold)
         res = run_path(prob, cfg, val_design=Xval, val_y=yval,
-                       verbose=True, backend=backend)
+                       verbose=True, backend=backend,
+                       callback=common.make_progress_callback(args))
+        common.finish_progress(args)
         payload = {"mode": "sweep", "backend": args.backend,
                    **path_summary(res)}
         weights = res.weights
@@ -152,6 +158,26 @@ def main(argv=None):
         art.save_model(args.save_model, family)
         print(f"[path] wrote model family ({len(family)} points) to "
               f"{args.save_model}")
+    if args.diag_out:
+        from repro.core import as_design
+        best = res.best
+        diag_report = {
+            "provenance": art.solver_provenance(
+                solver="pcdn", dataset=args.dataset, backend=args.backend,
+                mode=args.mode, P=args.P, tol_kkt=args.tol, seed=args.seed,
+                shrink=bool(args.shrink), loss=args.loss, dtype=args.dtype),
+            "loss": args.loss, "n_features": int(backend.n_features),
+            "objective": res.points[-1].objective if res.points else None,
+            "converged": res.points[-1].converged if res.points else None,
+            "nnz": res.points[-1].nnz if res.points else None,
+            "seconds": res.total_seconds,
+            "history": (common.history_dict(res.last_history)
+                        if res.last_history is not None else None),
+            "postmortem": res.last_postmortem}
+        if best is not None:
+            diag_report["best_c"] = best.c
+        common.write_diag(args, diag_report, design=as_design(X),
+                          tol_kkt=args.tol)
     common.finish_obs(args, meta={
         "cli": "path", "dataset": args.dataset, "mode": args.mode,
         "backend": args.backend, "points": len(res.points),

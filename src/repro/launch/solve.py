@@ -47,9 +47,13 @@ def main(argv=None):
     ap.add_argument("--save-model", default=None, metavar="PATH",
                     help="write just the serve artifact (no history)")
     common.add_obs_args(ap)
+    common.add_diag_args(ap)
     args = ap.parse_args(argv)
     if args.sharded:
         args.backend = "sharded"
+    if args.diag_out and args.solver not in ("pcdn", "cdn"):
+        ap.error("--diag-out requires --solver pcdn or cdn (the KKT "
+                 "attribution harvest is a bundle-solver output)")
     if args.warm_start and args.solver not in ("pcdn", "cdn"):
         ap.error("--warm-start requires --solver pcdn or cdn")
     if args.shrink and args.solver not in ("pcdn", "cdn"):
@@ -70,6 +74,7 @@ def main(argv=None):
           f"c={c} loss={args.loss} solver={args.solver} P={args.P} "
           f"backend={args.backend}")
     common.setup_obs(args)
+    progress = common.make_progress_callback(args)
 
     t0 = time.time()
     if args.backend == "sharded":
@@ -79,7 +84,7 @@ def main(argv=None):
               if args.warm_start else None)
         res = engine_loop.solve(backend, c, w0=w0,
                                 max_outer=args.max_outer,
-                                tol_kkt=args.tol)
+                                tol_kkt=args.tol, callback=progress)
         w = backend.host_weights(res.w)
         f, conv = res.objective, res.converged
         history = common.history_dict(res.history)
@@ -91,13 +96,17 @@ def main(argv=None):
                                      prob.dtype)
               if args.warm_start else None)
         if args.solver == "pcdn":
-            res = solve(prob, common.build_pcdn_config(args), w0=w0)
+            res = solve(prob, common.build_pcdn_config(args), w0=w0,
+                        callback=progress)
         elif args.solver == "cdn":
             res = solve(prob, cdn_config(max_outer=args.max_outer,
                                          tol_kkt=args.tol, seed=args.seed,
                                          shrink=args.shrink,
-                                         use_kernels=args.use_kernels),
-                        w0=w0)
+                                         use_kernels=args.use_kernels,
+                                         record_aux=common._record_aux(args),
+                                         record_kkt_vec=
+                                         common._record_kkt_vec(args)),
+                        w0=w0, callback=progress)
         elif args.solver == "scdn":
             res = scdn.solve(prob, SCDNConfig(max_rounds=args.max_outer,
                                               tol_kkt=args.tol,
@@ -112,6 +121,7 @@ def main(argv=None):
              for k_, v in res.history.items()}
     nnz = int(np.sum(np.asarray(w) != 0))
     dt = time.time() - t0
+    common.finish_progress(args)
 
     print(f"[solve] F={f:.6f} converged={conv} nnz={nnz} time={dt:.1f}s")
     if Xte is not None:
@@ -139,10 +149,29 @@ def main(argv=None):
             # from the artifact block itself
             record = common.sparse_weight_record(w)
             record.pop("n_features")
-            art.save_model(args.out, family, extra={
+            extra = {
                 "objective": float(f), "converged": bool(conv),
                 "nnz": nnz, "seconds": dt, **record,
-                "history": history if isinstance(history, dict) else None})
+                "history": history if isinstance(history, dict) else None}
+            pm = getattr(res, "postmortem", None)
+            if pm:
+                extra["postmortem"] = pm
+            art.save_model(args.out, family, extra=extra)
+    if args.diag_out:
+        from repro.core import as_design
+        prov = art.solver_provenance(
+            solver=args.solver, dataset=args.dataset, backend=args.backend,
+            P=args.P, tol_kkt=args.tol, seed=args.seed,
+            shrink=bool(args.shrink), loss=args.loss, dtype=args.dtype)
+        diag_report = {
+            "provenance": prov, "loss": args.loss,
+            "n_features": int(np.asarray(w).shape[0]),
+            "objective": float(f), "converged": bool(conv), "nnz": nnz,
+            "seconds": dt,
+            "history": history if isinstance(history, dict) else None,
+            "postmortem": getattr(res, "postmortem", None)}
+        common.write_diag(args, diag_report, design=as_design(X),
+                          tol_kkt=args.tol)
     common.finish_obs(args, meta={
         "cli": "solve", "dataset": args.dataset, "solver": args.solver,
         "backend": args.backend, "objective": float(f),

@@ -66,6 +66,11 @@ class PathResult(NamedTuple):
     weights: np.ndarray                 # (n_points, n) solutions per point
     best_index: Optional[int]           # argmax val accuracy (ties -> sparser)
     total_seconds: float
+    # final grid point's full SolveHistory (the tightest c — where
+    # parallelism stress peaks) for the `--diag-out` health report;
+    # None in batch mode, which has no per-iteration history.
+    last_history: Optional[object] = None
+    last_postmortem: Optional[dict] = None
 
     @property
     def best(self) -> Optional[PathPoint]:
@@ -86,7 +91,7 @@ def pick_best(points: Sequence[PathPoint]) -> Optional[int]:
 def run_path(problem: Optional[L1Problem], cfg: PathConfig,
              val_design=None, val_y=None,
              verbose: bool = False, outer=None,
-             backend=None) -> PathResult:
+             backend=None, callback=None) -> PathResult:
     """Sweep the c-grid; `problem.c` is a template value and is ignored.
 
     backend: any engine execution backend; defaults to a `LocalBackend`
@@ -99,6 +104,8 @@ def run_path(problem: Optional[L1Problem], cfg: PathConfig,
     for the default local backend — benchmarks pass an already-compiled
     one so warm-vs-cold timings compare solver work, not XLA compile
     time.
+    callback: forwarded to every point's engine loop (the `--progress`
+    live status — signature (k, w, f, kkt, mean_q)).
     """
     if (val_design is None) != (val_y is None):
         raise ValueError("pass both val_design and val_y or neither")
@@ -116,6 +123,7 @@ def run_path(problem: Optional[L1Problem], cfg: PathConfig,
     state = backend.init_state()
 
     points: list[PathPoint] = []
+    res = None
     weights = np.zeros((len(cs), n), np.dtype(backend.dtype))
     t_total0 = time.perf_counter()
     for i, c in enumerate(cs):
@@ -131,7 +139,7 @@ def run_path(problem: Optional[L1Problem], cfg: PathConfig,
             backend.outer, state, float(c),
             max_outer=solver.max_outer, tol_kkt=solver.tol_kkt,
             recheck_every=solver.recheck_every,
-            tol_rel_obj=solver.tol_rel_obj)
+            tol_rel_obj=solver.tol_rel_obj, callback=callback)
         seconds = time.perf_counter() - t0
         obs.complete("path.point", "path", t0_ns, time.perf_counter_ns(),
                      args={"i": i, "c": float(c), "n_outer": res.n_outer,
@@ -156,7 +164,9 @@ def run_path(problem: Optional[L1Problem], cfg: PathConfig,
 
     return PathResult(c_max=c_max, cs=cs, points=points, weights=weights,
                       best_index=pick_best(points),
-                      total_seconds=time.perf_counter() - t_total0)
+                      total_seconds=time.perf_counter() - t_total0,
+                      last_history=res.history if res else None,
+                      last_postmortem=res.postmortem if res else None)
 
 
 def path_summary(result: PathResult) -> dict:

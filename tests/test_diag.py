@@ -1,0 +1,525 @@
+"""Solver-health diagnostics (DESIGN.md section 15): per-feature KKT
+attribution vs direct recomputation on both design layouts, the
+structural extra-output dispatch, backtrack forensics, the certified-P
+estimator vs numpy.linalg.eigvalsh, the health-report CLI, the metrics
+JSONL validator exit codes, and the perf-regression sentinel."""
+import dataclasses
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core import PCDNConfig, make_problem, solve
+from repro.data import make_classification
+from repro.diag import forensics, kkt, safep
+from repro.diag import report as diag_report
+from repro.engine import (LocalBackend, ShardedBackend, ShardedPCDNConfig,
+                          loop as engine_loop)
+from repro.launch import common as launch_common
+from repro.launch.mesh import make_host_mesh
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    """Diagnostics must not depend on (or leak into) the telemetry
+    planes — same process-state hygiene as test_obs."""
+    obs.disable()
+    obs.registry.reset()
+    yield
+    obs.disable()
+    obs.registry.reset()
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification(220, 96, sparsity=0.8, corr=0.3, seed=5)
+
+
+# ---------------------------------------------------------------------------
+# KKT attribution: the record_kkt_vec harvest (DESIGN.md section 15.1)
+
+
+@pytest.mark.parametrize("layout", ["dense", "padded_csc"])
+def test_kkt_vec_matches_direct_recomputation(data, layout):
+    """The final recorded violation row must equal a direct dense
+    recomputation of the minimum-norm subgradient at the final iterate —
+    on BOTH design layouts."""
+    X, y, _ = data
+    prob = make_problem(X, y, c=1.0, layout=layout)
+    cfg = PCDNConfig(P=32, max_outer=8, tol_kkt=0.0, seed=0,
+                     record_kkt_vec=True)
+    res = solve(prob, cfg)
+    h = res.history
+    assert h.kkt_vec is not None
+    assert h.kkt_vec.shape == (res.n_outer, prob.n_features)
+    w = jnp.asarray(res.w)
+    g = prob.full_grad(prob.design.matvec(w), w)
+    direct = np.asarray(prob.kkt_violation_from_grad(w, g), np.float64)
+    np.testing.assert_allclose(h.kkt_vec[-1].astype(np.float64), direct,
+                               atol=1e-5)
+    # the scalar stop criterion is the max of the recorded vector, at
+    # every iteration, not just the last
+    np.testing.assert_allclose(h.kkt_vec.max(axis=1), h.kkt, rtol=1e-5,
+                               atol=1e-7)
+
+
+def test_record_kkt_vec_off_is_bit_identical_and_registry_silent(data):
+    """The acceptance guarantee: the harvest is pure passthrough — same
+    iterates to the bit with it off, and no registry activity either
+    way."""
+    X, y, _ = data
+    prob = make_problem(X, y, c=1.0)
+    cfg = PCDNConfig(P=32, max_outer=10, tol_kkt=1e-8, seed=0)
+    r_off = solve(prob, cfg)
+    r_on = solve(prob, dataclasses.replace(cfg, record_kkt_vec=True))
+    assert r_on.n_outer == r_off.n_outer
+    np.testing.assert_array_equal(np.asarray(r_off.w), np.asarray(r_on.w))
+    assert r_off.history.kkt_vec is None
+    assert r_on.history.kkt_vec is not None
+    assert obs.registry.get_registry().empty
+
+
+def test_structural_dispatch_arity_combinations(data):
+    """Extra outer outputs dispatch by structure: a 2-tuple is the
+    (q, alpha) aux, a bare array the violation vector — in any
+    combination after the 9-tuple contract."""
+    X, y, _ = data
+    prob = make_problem(X, y, c=1.0)
+    n = prob.n_features
+    b = n // 32 + (n % 32 > 0)
+    cfg = PCDNConfig(P=32, max_outer=3, seed=0)
+
+    def outer_of(c):
+        bk = LocalBackend(prob, c)
+        st = bk.init_state()
+        return bk.outer(st.w, st.z, st.key, st.active, jnp.asarray(True),
+                        jnp.asarray(1.0, st.w.dtype))
+
+    out = outer_of(dataclasses.replace(cfg, record_kkt_vec=True))
+    assert len(out) == 10 and out[9].shape == (n,)
+
+    out = outer_of(dataclasses.replace(cfg, record_aux=True,
+                                       record_kkt_vec=True))
+    assert len(out) == 11
+    q, alpha = out[9]
+    assert q.shape == (b,) and alpha.shape == (b,)
+    assert out[10].shape == (n,)
+
+    # both planes land in history from one solve
+    res = solve(prob, dataclasses.replace(cfg, max_outer=5, tol_kkt=0.0,
+                                          record_aux=True,
+                                          record_kkt_vec=True))
+    h = res.history
+    assert h.bundle_q is not None and h.kkt_vec is not None
+    assert h.bundle_q.shape[0] == h.kkt_vec.shape[0] == res.n_outer
+
+
+def test_sharded_1x1_kkt_vec_matches_local(data):
+    X, y, _ = data
+    mesh = make_host_mesh(1, 1)
+    cfg = ShardedPCDNConfig(P_local=32, c=1.0, seed=0,
+                            record_kkt_vec=True)
+    backend = ShardedBackend(X, y, mesh, cfg)
+    res = engine_loop.solve(backend, 1.0, max_outer=5, tol_kkt=0.0)
+    h = res.history
+    assert h.kkt_vec is not None
+    assert h.kkt_vec.shape[0] == res.n_outer
+    # per-shard violation of padded features is exactly zero and the max
+    # reproduces the scalar stop series
+    np.testing.assert_allclose(h.kkt_vec.max(axis=1), h.kkt, rtol=1e-5,
+                               atol=1e-7)
+
+
+def test_engine_callback_five_args(data):
+    X, y, _ = data
+    prob = make_problem(X, y, c=1.0)
+    seen = []
+    solve(prob, PCDNConfig(P=32, max_outer=4, tol_kkt=0.0, seed=0),
+          callback=lambda k, w, f, kkt_f, mean_q: seen.append(
+              (k, float(f), float(kkt_f), float(mean_q))))
+    assert len(seen) == 4
+    assert [s[0] for s in seen] == [0, 1, 2, 3]
+    assert all(np.isfinite(s[1]) for s in seen)
+
+
+def test_progress_callback_gate():
+    class Args:
+        progress = False
+    assert launch_common.make_progress_callback(Args()) is None
+    Args.progress = True
+    cb = launch_common.make_progress_callback(Args())
+    assert cb is not None
+    cb(3, None, 1.25, 1e-3, 0.5)  # 5-arg engine signature
+
+
+# ---------------------------------------------------------------------------
+# kkt analysis units
+
+
+def _toy_series():
+    # 3 iterations x 4 features, hand-chosen
+    return np.array([[1.0, 0.5, 0.0, 2.0],
+                     [0.5, 0.0, 0.1, 1.0],
+                     [0.2, 0.0, 0.0, 0.6]])
+
+
+def test_top_offenders_ranked_by_final():
+    off = kkt.top_offenders(_toy_series(), k=2, tol=0.0)
+    assert [o["feature"] for o in off] == [3, 0]
+    assert off[0]["viol_final"] == 0.6
+    assert off[0]["viol_max"] == 2.0
+    assert off[0]["iters_violating"] == 3
+    assert off[1]["iters_violating"] == 3
+
+
+def test_violation_histogram_shape_contract():
+    h = kkt.violation_histogram(_toy_series())
+    assert h["count"] == 4
+    assert h["zeros"] == 2          # features 1 and 2 end at exactly 0
+    assert len(h["counts"]) == len(h["bounds"]) + 1
+    assert sum(h["counts"]) == h["count"] - h["zeros"]
+    assert h["max"] == 0.6
+
+
+def test_active_churn_counts_crossings():
+    ch = kkt.active_churn(_toy_series(), tol=0.3)
+    assert ch["n_violating"] == [3, 2, 1]
+    assert ch["entered"] == [0, 0, 0]
+    assert ch["left"] == [0, 1, 1]
+    assert ch["total_churn"] == 2
+
+
+def test_attribution_block_is_json_ready():
+    block = kkt.attribution(_toy_series(), tol=1e-3, top_k=3)
+    json.dumps(block)  # must not raise
+    assert block["n_iters"] == 3 and block["n_features"] == 4
+    assert len(block["offenders"]) == 3
+
+
+# ---------------------------------------------------------------------------
+# backtrack forensics units
+
+
+def test_backtrack_heatmap_masks_sentinels():
+    q = np.array([[0, 2, -1, -1],
+                  [1, 4, 0, -1]])
+    h = forensics.backtrack_heatmap(q)
+    assert h["bundles_ran"] == 5
+    assert sum(h["depth_counts"]) == 5
+    assert h["depth_counts"][4] == 1
+    assert h["per_iter_max"] == [2.0, 4.0]
+    # iteration 1: one of three live bundles at depth >= 3
+    assert h["per_iter_deep_frac"][1] == pytest.approx(1.0 / 3.0)
+
+
+def test_worst_bundles_and_alpha_trajectory():
+    q = np.array([[0, 5], [3, -1]])
+    worst = forensics.worst_bundles(q, k=2)
+    assert worst[0] == {"iter": 0, "bundle": 1, "q": 5}
+    assert worst[1] == {"iter": 1, "bundle": 0, "q": 3}
+    a = forensics.alpha_trajectory(np.array([[1.0, 0.25],
+                                             [0.5, np.nan]]))
+    assert a["per_iter_min"] == [0.25, 0.5]
+
+
+def test_divergence_postmortem_keys_and_growth():
+    obj = [10.0, 8.0, 9.0, 30.0]
+    pm = forensics.divergence_postmortem(
+        obj, kkt=[1.0, 0.5, 2.0, 9.0], ls_steps=[1.0, 2.0, 5.0, 4.0],
+        bundle_q=np.array([[0, 1], [1, 2], [5, 4], [3, 3]]),
+        bundle_alpha=np.array([[1.0, 0.5], [0.5, 0.25],
+                               [0.03125, 0.0625], [0.125, 0.125]]))
+    assert pm["trip_iter"] == 3 and pm["onset_iter"] == 1
+    assert pm["objective_growth"] == pytest.approx(22.0)
+    assert pm["deepest_mean_q"] == 5.0
+    assert pm["alpha_floor"] == pytest.approx(0.03125)
+    assert pm["worst_bundles"][0]["q"] == 5
+    json.dumps(pm)
+
+
+def test_divergence_guard_attaches_postmortem():
+    """A guard trip must come back with the post-mortem attached —
+    driven through a synthetic outer whose objective blows up, so the
+    trip is deterministic."""
+    n, b = 8, 2
+    objectives = iter([3.0, 2.0, 5.0, 50.0])
+
+    def outer(w, z, key, active, recheck, c):
+        f = next(objectives)
+        q = jnp.full((b,), 4, jnp.int32)
+        alpha = jnp.full((b,), 0.0625)
+        viol = jnp.full((n,), 0.5)
+        return (w, z, key, jnp.asarray(f), jnp.asarray(9.0),
+                jnp.asarray(n), jnp.asarray(4.0), active,
+                jnp.asarray(n), (q, alpha), viol)
+
+    state = engine_loop.EngineState(
+        w=jnp.zeros(n), z=jnp.zeros(4),
+        key=jnp.zeros(2, jnp.uint32), active=jnp.ones(n, bool))
+    _, res = engine_loop.run_outer_loop(
+        outer, state, 1.0, max_outer=10, tol_kkt=1e-12,
+        divergence_guard=lambda f: f > 10.0)
+    assert res.diverged and not res.converged
+    pm = res.postmortem
+    assert pm is not None
+    assert pm["trip_iter"] == 3 and pm["onset_iter"] == 1
+    assert pm["objective_growth"] == pytest.approx(48.0)
+    assert "heatmap" in pm and "alpha" in pm   # aux rode along
+    assert res.history.kkt_vec is not None     # and the viol plane too
+    json.dumps(pm)
+
+
+# ---------------------------------------------------------------------------
+# certified safe parallelism (DESIGN.md section 15.3)
+
+
+@pytest.mark.parametrize("s,n,sparsity", [(60, 40, 0.0), (80, 50, 0.9)])
+def test_power_iteration_matches_eigvalsh(s, n, sparsity):
+    X, y, _ = make_classification(s, n, sparsity=sparsity, seed=7)
+    for layout in ("dense", "padded_csc"):
+        prob = make_problem(X, y, c=1.0, layout=layout)
+        got = safep.power_iteration_rho(prob.design, n_iter=3000)
+        Xd = np.asarray(X, np.float64) if layout == "dense" else \
+            np.asarray(prob.design.to_dense(), np.float64)
+        norms = np.linalg.norm(Xd, axis=0)
+        norms[norms == 0] = 1.0
+        Xn = Xd / norms
+        rho_direct = float(np.linalg.eigvalsh(Xn.T @ Xn).max())
+        assert got["converged"]
+        assert got["rho"] == pytest.approx(rho_direct, rel=1e-4)
+
+
+def test_omega_row_support_both_layouts():
+    X, y, _ = make_classification(50, 30, sparsity=0.9, seed=3)
+    direct = int(np.max(np.sum(np.asarray(X) != 0, axis=1)))
+    for layout in ("dense", "padded_csc"):
+        prob = make_problem(X, y, c=1.0, layout=layout)
+        assert safep.omega_row_support(prob.design) == direct
+
+
+def test_eso_and_spectral_edge_cases():
+    # no coupling -> every coordinate independent -> tau = n
+    assert safep.eso_safe_p(omega=1, n_features=64) == 64
+    assert safep.eso_safe_p(omega=0, n_features=64) == 64
+    assert safep.eso_safe_p(omega=5, n_features=1) == 1
+    # dense coupling at beta_max=2: tau = 1 + (n-1)/(omega-1) = 2
+    assert safep.eso_safe_p(omega=64, n_features=64) == 2
+    assert safep.spectral_safe_p(rho=1.0, n_features=64) == 64
+    assert safep.spectral_safe_p(rho=64.0, n_features=64) == 1
+    assert safep.spectral_safe_p(rho=0.0, n_features=64) == 64
+
+
+def test_certify_record_shape():
+    X, y, _ = make_classification(40, 24, sparsity=0.5, seed=1)
+    prob = make_problem(X, y, c=1.0)
+    cert = safep.certify(prob.design, observed_p=8)
+    assert cert["P_cert"] == max(cert["P_spectral"], cert["P_eso"])
+    assert 1 <= cert["P_cert"] <= cert["n_features"]
+    assert cert["observed_P"] == 8
+    json.dumps(cert)
+
+
+# ---------------------------------------------------------------------------
+# report CLI (DESIGN.md section 15.4)
+
+
+def _fake_report(tmp_path, with_postmortem=False):
+    hist = {"outer_iter": [0, 1, 2],
+            "objective": [3.0, 2.0, 1.5],
+            "kkt": [1.0, 0.5, 0.1],
+            "nnz": [20, 15, 12],
+            "ls_steps": [0.0, 1.0, 0.5],
+            "wall_time": [0.1, 0.2, 0.3],
+            "n_active": [24, 24, 24],
+            "bundle_q": [[0, 0], [1, 2], [0, 1]],
+            "bundle_alpha": [[1.0, 1.0], [0.5, 0.25], [1.0, 0.5]],
+            "kkt_vec": np.abs(
+                np.random.default_rng(0).standard_normal((3, 24))
+            ).tolist()}
+    rep = {"provenance": {"solver": "pcdn", "P": 8, "tol_kkt": 1e-3},
+           "loss": "logistic", "n_features": 24, "objective": 1.5,
+           "converged": True, "nnz": 12, "seconds": 0.3,
+           "history": hist}
+    if with_postmortem:
+        rep["postmortem"] = forensics.divergence_postmortem(
+            hist["objective"], hist["kkt"], hist["ls_steps"],
+            bundle_q=hist["bundle_q"], bundle_alpha=hist["bundle_alpha"])
+    p = tmp_path / "report.json"
+    p.write_text(json.dumps(rep))
+    return p
+
+
+def test_report_cli_renders_sections(tmp_path):
+    rp = _fake_report(tmp_path, with_postmortem=True)
+    out = tmp_path / "health.md"
+    rc = diag_report.main(["--report", str(rp), "-o", str(out)])
+    assert rc == 0
+    md = out.read_text()
+    for section in ("# Solver health report", "## Run summary",
+                    "## Convergence", "## Top KKT offenders",
+                    "## Backtrack forensics", "## Divergence post-mortem"):
+        assert section in md, f"missing {section}"
+
+
+def test_report_cli_requires_an_input():
+    with pytest.raises(SystemExit) as exc:
+        diag_report.main([])
+    assert exc.value.code == 2
+
+
+def test_build_payload_from_metrics_and_trace_only():
+    records = [{"ts": "t", "metrics": {
+        "counters": {"solver.outer_iters": 5},
+        "gauges": {"solver.kkt": 0.1},
+        "histograms": {}}}]
+    trace = {"traceEvents": [
+        {"name": "solve", "ph": "X", "ts": 0, "dur": 1000,
+         "pid": 1, "tid": 1}]}
+    payload = diag_report.build_payload(metrics_records=records,
+                                        trace=trace)
+    md = diag_report.render_markdown(payload)
+    assert "## Metrics summary" in md and "## Trace summary" in md
+
+
+# ---------------------------------------------------------------------------
+# metrics JSONL validator (the CI gate)
+
+
+def _good_record():
+    return {"ts": "2026-01-01T00:00:00", "run": "r",
+            "metrics": {"counters": {"a": 1}, "gauges": {"g": 0.5},
+                        "histograms": {"h": {
+                            "count": 2, "sum": 3.0, "min": 1.0,
+                            "max": 2.0, "mean": 1.5, "p50": 1.0,
+                            "p99": 2.0, "bounds": [1.5],
+                            "counts": [1, 1]}}}}
+
+
+def test_validate_metrics_record_rejects_bad_shapes():
+    from repro.obs import validate as v
+    v.validate_metrics_record(_good_record())
+    for mutate in (
+        lambda r: r.pop("ts"),
+        lambda r: r["metrics"]["counters"].update(a="x"),
+        lambda r: r["metrics"].update(extra={}),
+        lambda r: r["metrics"]["histograms"]["h"].update(counts=[1]),
+        lambda r: r["metrics"]["histograms"]["h"].update(count=5),
+        lambda r: r["metrics"]["histograms"]["h"].update(bounds=[2, 1],
+                                                        counts=[0, 1, 1],
+                                                        count=2),
+    ):
+        r = json.loads(json.dumps(_good_record()))
+        mutate(r)
+        with pytest.raises(ValueError):
+            v.validate_metrics_record(r)
+
+
+def test_validate_metrics_file_line_numbers(tmp_path):
+    from repro.obs import validate as v
+    p = tmp_path / "run.jsonl"
+    p.write_text(json.dumps(_good_record()) + "\nnot json\n")
+    with pytest.raises(ValueError, match="line 2"):
+        v.validate_metrics_file(str(p))
+    (tmp_path / "empty.jsonl").write_text("")
+    with pytest.raises(ValueError, match="empty"):
+        v.validate_metrics_file(str(tmp_path / "empty.jsonl"))
+
+
+def test_validate_cli_exit_codes_metrics(tmp_path):
+    good = tmp_path / "good.jsonl"
+    good.write_text(json.dumps(_good_record()) + "\n")
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps({"no_ts": 1}) + "\n")
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-m", "repro.obs.validate",
+                        str(good)], capture_output=True, text=True,
+                       cwd=REPO_ROOT, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK (1 records)" in r.stdout
+    r = subprocess.run([sys.executable, "-m", "repro.obs.validate",
+                        str(good), str(bad)], capture_output=True,
+                       text=True, cwd=REPO_ROOT, env=env)
+    assert r.returncode == 1
+    assert "INVALID" in r.stderr
+    r = subprocess.run([sys.executable, "-m", "repro.obs.validate"],
+                       capture_output=True, text=True, cwd=REPO_ROOT,
+                       env=env)
+    assert r.returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# perf-regression sentinel
+
+
+def _load_sentinel():
+    path = os.path.join(REPO_ROOT, "benchmarks", "sentinel.py")
+    spec = importlib.util.spec_from_file_location("bench_sentinel", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_sentinel_missing_vs_strict(tmp_path):
+    sent = _load_sentinel()
+    out_dir = str(tmp_path / "results")
+    status, results, _ = sent.run(str(tmp_path), strict=False,
+                                  out_dir=out_dir)
+    assert status == 0
+    assert all(r["status"] == "MISSING" for r in results)
+    status, _, _ = sent.run(str(tmp_path), strict=True, out_dir=out_dir)
+    assert status == 1
+
+
+def test_sentinel_pass_fail_and_trajectory(tmp_path):
+    sent = _load_sentinel()
+    root = tmp_path
+    (root / "BENCH_diag.json").write_text(json.dumps({
+        "backend": "cpu",
+        "attribution": {"overhead_pct": 1.0},
+        "safep": {"agreement": True}}))
+    out_dir = str(root / "results")
+    status, results, traj = sent.run(str(root), strict=False,
+                                     out_dir=out_dir)
+    diag_rows = [r for r in results if r["artifact"] == "BENCH_diag.json"]
+    assert all(r["status"] == "OK" for r in diag_rows)
+    assert status == 0
+    tpath = os.path.join(out_dir, "BENCH_trajectory.json")
+    assert os.path.exists(tpath)
+    with open(tpath) as fh:
+        saved = json.load(fh)
+    assert saved["artifacts"]["BENCH_diag.json"]["headlines"][
+        "attribution.overhead_pct"] == 1.0
+    assert saved["status"] == "pass"
+
+    # regression: overhead over budget must fail the gate
+    (root / "BENCH_diag.json").write_text(json.dumps({
+        "attribution": {"overhead_pct": 12.0},
+        "safep": {"agreement": True}}))
+    status, results, _ = sent.run(str(root), strict=False, out_dir=out_dir)
+    assert status == 1
+    bad = [r for r in results
+           if r["key"] == "attribution.overhead_pct"][0]
+    assert bad["status"] == "FAIL"
+    # malformed artifact is UNREADABLE, not a crash
+    (root / "BENCH_diag.json").write_text("{ nope")
+    status, results, _ = sent.run(str(root), strict=False, out_dir=out_dir)
+    assert status == 1
+    assert any(r["status"] == "UNREADABLE" for r in results)
+
+
+def test_sentinel_passes_on_committed_artifacts():
+    """The committed repo-root artifacts must satisfy their own gate."""
+    sent = _load_sentinel()
+    status, results, _ = sent.run(REPO_ROOT, strict=True,
+                                  out_dir=os.path.join(
+                                      sent.RESULTS_DIR))
+    assert status == 0, [r for r in results if r["status"] != "OK"]
