@@ -57,6 +57,11 @@ CHECKS = [
      "per-feature KKT attribution overhead budget"),
     ("BENCH_diag.json", "safep.agreement", "==", True,
      "power-iteration rho must agree with direct eigenvalues"),
+    ("BENCH_fault.json", "checkpoint.overhead_pct", "<=", 5.0,
+     "crash-safe checkpointing budget at --ckpt-every 10 (measured ~0%)"),
+    ("BENCH_fault.json", "recovery.objective_rel_diff", "<=", 1e-6,
+     "SIGKILL'd sweep resumed via --resume must match the uninterrupted "
+     "run (measured exact)"),
 ]
 
 

@@ -4,11 +4,13 @@ from repro.core.design_matrix import (DenseDesign, DesignMatrix,
 from repro.core.linesearch import ArmijoParams
 from repro.core.problem import (L1Problem, expected_max_column_norm,
                                 make_problem)
-from repro.core.pcdn import PCDNConfig, SolveResult, cdn_config, solve
+from repro.core.pcdn import (PCDNConfig, SolveResult, cdn_config, solve,
+                             with_bundle_size)
 from repro.core import scdn, tron
 
 __all__ = [
     "ArmijoParams", "L1Problem", "make_problem", "expected_max_column_norm",
     "PCDNConfig", "SolveResult", "cdn_config", "solve", "scdn", "tron",
+    "with_bundle_size",
     "DesignMatrix", "DenseDesign", "PaddedCSCDesign", "as_design",
 ]

@@ -91,6 +91,13 @@ def cdn_config(**kw) -> PCDNConfig:
     return PCDNConfig(P=1, **kw)
 
 
+def with_bundle_size(cfg: PCDNConfig, P: int) -> PCDNConfig:
+    """`cfg` at a different bundle size, everything else identical — the
+    backend-rebuild hook the fault layer's P-backoff uses (DESIGN.md
+    section 16.3)."""
+    return dataclasses.replace(cfg, P=int(P))
+
+
 def _line_search_fn(cfg: PCDNConfig) -> Callable:
     if cfg.ls_kind == "batched":
         # full-scope batched search runs chunked with early exit so the

@@ -102,7 +102,11 @@ def divergence_postmortem(objective, kkt, ls_steps,
     kkt = np.asarray(kkt, np.float64)
     ls = np.asarray(ls_steps, np.float64)
     trip = int(obj.shape[0]) - 1
-    onset = int(np.nanargmin(obj)) if obj.size else 0
+    # nanargmin/nanargmax raise on all-NaN input, which a non-finite
+    # trip on the very first iteration produces — fall back to row 0
+    obj_ok = obj.size and bool(np.any(np.isfinite(obj)))
+    ls_ok = ls.size and bool(np.any(np.isfinite(ls)))
+    onset = int(np.nanargmin(obj)) if obj_ok else 0
     pm = {
         "trip_iter": trip,
         "onset_iter": onset,
@@ -111,8 +115,8 @@ def divergence_postmortem(objective, kkt, ls_steps,
         "objective_growth": float(obj[-1] - obj[onset]) if obj.size
         else float("nan"),
         "kkt_at_trip": float(kkt[-1]) if kkt.size else float("nan"),
-        "deepest_mean_q": float(np.nanmax(ls)) if ls.size else float("nan"),
-        "deepest_mean_q_iter": int(np.nanargmax(ls)) if ls.size else 0,
+        "deepest_mean_q": float(np.nanmax(ls)) if ls_ok else float("nan"),
+        "deepest_mean_q_iter": int(np.nanargmax(ls)) if ls_ok else 0,
     }
     if bundle_q is not None:
         pm["heatmap"] = backtrack_heatmap(bundle_q)

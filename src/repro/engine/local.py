@@ -73,3 +73,26 @@ class LocalBackend:
 
     def host_weights(self, w: Array) -> np.ndarray:
         return np.asarray(w)
+
+    def host_margins(self, z: Array) -> np.ndarray:
+        """(n_samples,) host margins — the checkpoint image of z."""
+        return np.asarray(z)
+
+    def restore_state(self, w, z=None, active=None, key=None) -> EngineState:
+        """EngineState from host arrays (a `fault.checkpoint` snapshot,
+        possibly written by a DIFFERENT backend/mesh — checkpoints store
+        full unpadded host arrays precisely so this works). Missing
+        pieces fall back to init_state semantics: z is recomputed from
+        w, active to all-True, key to the config seed chain."""
+        n, s = self.n_features, self.n_samples
+        w = jnp.asarray(w, self.dtype)
+        if w.shape[0] != n:
+            raise ValueError(f"checkpoint has {w.shape[0]} features, "
+                             f"problem has {n}")
+        z = (self.problem.margins(w) if z is None
+             else jnp.asarray(np.asarray(z).reshape(s), self.dtype))
+        active = (jnp.ones((n,), bool) if active is None
+                  else jnp.asarray(np.asarray(active).reshape(n), bool))
+        key = (jax.random.PRNGKey(self.cfg.seed) if key is None
+               else jnp.asarray(np.asarray(key), jnp.uint32))
+        return EngineState(w=w, z=z, key=key, active=active)

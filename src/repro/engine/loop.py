@@ -86,12 +86,22 @@ class SolveResult(NamedTuple):
     n_outer: int
     converged: bool
     history: SolveHistory
-    diverged: bool = False     # only set by solvers with a divergence guard
+    diverged: bool = False     # divergence guard OR non-finite detector
     # divergence post-mortem (DESIGN.md section 15.2): attached when the
     # divergence guard trips — which iterations/bundles drove the deep
     # backtracks and how alpha collapsed, from whatever series the run
     # recorded (richer with record_aux). None on non-diverged solves.
     postmortem: Optional[dict] = None
+    # non-finite trip (DESIGN.md section 16.3): the always-on detector
+    # caught NaN/inf in (f, kkt) — the objective-growth guard alone
+    # cannot (NaN fails every comparison). When set, `w`/`objective` and
+    # the returned EngineState are the LAST GOOD iterate, so a caller
+    # (fault.resilient_solve) can roll back and retry at damped P.
+    nonfinite: bool = False
+    # rollback/P-backoff record attached by fault.resilient_solve:
+    # {"rollbacks", "p_schedule", "p_cert", "resumed_from"}. None on
+    # fault-free solves.
+    faults: Optional[dict] = None
 
 
 class ExecutionBackend(Protocol):
@@ -121,12 +131,36 @@ class ExecutionBackend(Protocol):
     def host_weights(self, w: Array) -> np.ndarray: ...  # (n_features,) host
 
 
+def _build_postmortem(hist: dict, aux_q: list, aux_alpha: list,
+                      k: int) -> dict:
+    """Divergence post-mortem (DESIGN.md section 15.2) from the rows
+    recorded so far, richer when per-bundle aux rode along. Local
+    import — diag consumes the engine, so a top-level import would close
+    the layering cycle. Shared by the guard trip and the non-finite
+    detector."""
+    from repro.diag import forensics
+    postmortem = forensics.divergence_postmortem(
+        objective=np.asarray(hist["objective"]),
+        kkt=np.asarray(hist["kkt"]),
+        ls_steps=np.asarray(hist["ls_steps"]),
+        bundle_q=np.asarray(aux_q) if aux_q else None,
+        bundle_alpha=np.asarray(aux_alpha) if aux_alpha else None)
+    obs.instant("engine.divergence_postmortem", "engine",
+                args={"k": k,
+                      "objective_growth": postmortem["objective_growth"],
+                      "deepest_mean_q": postmortem["deepest_mean_q"]})
+    return postmortem
+
+
 def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
                    max_outer: int, tol_kkt: float,
                    recheck_every: int = 1, tol_rel_obj: float = 0.0,
                    f_star: Optional[float] = None,
                    callback: Optional[Callable] = None,
                    divergence_guard: Optional[Callable[[float], bool]] = None,
+                   start_iter: int = 0,
+                   state_callback: Optional[Callable] = None,
+                   check_finite_w: bool = False,
                    ) -> Tuple[EngineState, SolveResult]:
     """Host-side convergence loop around a backend outer iteration.
 
@@ -139,6 +173,28 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
     trip the result carries a `postmortem` dict (repro.diag.forensics)
     built from the recorded series — richer when the backend also
     recorded per-bundle aux.
+
+    Non-finite detection is ALWAYS on (DESIGN.md section 16.3): a NaN/inf
+    objective or KKT — which `divergence_guard(f)`'s growth comparison
+    can never catch, NaN compares False — aborts the loop with
+    `diverged=True, nonfinite=True`, a postmortem, and the LAST GOOD
+    iterate as the returned state/weights (the poisoned carry is
+    discarded — it is what the caller must NOT keep). The detector reads
+    only the f/kkt host floats the loop already syncs, so the fault-free
+    hot path gains zero device work; `check_finite_w=True` additionally
+    scans the weight vector each iteration (one device all-reduce — the
+    belt-and-braces mode `fault.resilient_solve` runs retries under).
+
+    start_iter shifts the iteration counter: the loop runs iterations
+    [start_iter, max_outer) with GLOBAL indices, so a resumed solve
+    replays the exact recheck cadence (k % recheck_every) and history
+    numbering of the uninterrupted run — max_outer stays the TOTAL
+    budget, not a per-resume increment.
+
+    state_callback(k, EngineState, f, kkt) fires after each FINITE
+    iteration's host sync — the periodic-checkpoint hook
+    (fault.SolveCheckpointer.solve_callback); it never sees a poisoned
+    carry.
 
     Outputs past the 9-tuple are dispatched STRUCTURALLY, so the two
     opt-in device-aux planes compose in any combination:
@@ -168,17 +224,20 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
     aux_alpha: list = []
     kkt_rows: list = []
     t0 = time.perf_counter()
-    converged = diverged = False
+    converged = diverged = nonfinite = False
     postmortem = None
-    f = float("nan")
+    f = f_good = float("nan")
     prev_active = None
-    k = 0
-    for k in range(max_outer):
+    k = start_iter - 1
+    for k in range(start_iter, max_outer):
         # iteration 0 always rechecks so a stale warm-started active set
         # (e.g. carried across path points) is repaired immediately.
         recheck = jnp.asarray(k == 0 or recheck_every <= 1
                               or k % recheck_every == 0)
         t_iter = time.perf_counter_ns()
+        # the pre-iteration carry is the rollback target should this
+        # iteration come back non-finite
+        prev_state = (w, z, key, active)
         out = outer(w, z, key, active, recheck, c_arr)
         w, z, key, f_, kkt, nnz, mean_q, active, n_active = out[:9]
         aux = kkt_vec = None
@@ -237,28 +296,32 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
                            "n_active": n_active_i})
         if callback is not None:
             callback(k, w, f, kkt_f, float(mean_q))
+        # non-finite detector (DESIGN.md section 16.3): always on, free
+        # on the hot path (f/kkt are already host floats here)
+        finite = np.isfinite(f) and np.isfinite(kkt_f)
+        if finite and check_finite_w:
+            finite = bool(jnp.all(jnp.isfinite(w)))
+        if not finite:
+            diverged = nonfinite = True
+            obs.inc("solver.nonfinite_trips")
+            obs.instant("engine.nonfinite_guard", "engine",
+                        args={"k": k, "objective": f, "kkt": kkt_f})
+            postmortem = _build_postmortem(hist, aux_q, aux_alpha, k)
+            # roll the carry back to the last good iterate: the poisoned
+            # state must never leak into warm starts, checkpoints or the
+            # returned weights
+            w, z, key, active = prev_state
+            f = f_good
+            break
+        f_good = f
+        if state_callback is not None:
+            state_callback(k, EngineState(w, z, key, active), f, kkt_f)
         if divergence_guard is not None and divergence_guard(f):
             diverged = True
             obs.inc("solver.divergence_trips")
             obs.instant("engine.divergence_guard", "engine",
                         args={"k": k, "objective": f})
-            # divergence post-mortem (DESIGN.md section 15.2): built
-            # from the rows recorded so far, richer when per-bundle aux
-            # rode along. Local import — diag consumes the engine, so a
-            # top-level import would close the layering cycle.
-            from repro.diag import forensics
-            postmortem = forensics.divergence_postmortem(
-                objective=np.asarray(hist["objective"]),
-                kkt=np.asarray(hist["kkt"]),
-                ls_steps=np.asarray(hist["ls_steps"]),
-                bundle_q=np.asarray(aux_q) if aux_q else None,
-                bundle_alpha=np.asarray(aux_alpha) if aux_alpha else None)
-            obs.instant("engine.divergence_postmortem", "engine",
-                        args={"k": k,
-                              "objective_growth":
-                                  postmortem["objective_growth"],
-                              "deepest_mean_q":
-                                  postmortem["deepest_mean_q"]})
+            postmortem = _build_postmortem(hist, aux_q, aux_alpha, k)
             break
         if kkt_f <= tol_kkt:
             converged = True
@@ -274,7 +337,8 @@ def run_outer_loop(outer: Callable, state: EngineState, c: float, *,
         kkt_vec=np.asarray(kkt_rows) if kkt_rows else None)
     result = SolveResult(w=w, objective=f, n_outer=k + 1,
                          converged=converged, history=history,
-                         diverged=diverged, postmortem=postmortem)
+                         diverged=diverged, postmortem=postmortem,
+                         nonfinite=nonfinite)
     return EngineState(w, z, key, active), result
 
 

@@ -756,3 +756,38 @@ class ShardedBackend:
 
     def host_weights(self, w: Array) -> np.ndarray:
         return np.asarray(w)[:self._n]
+
+    def host_margins(self, z: Array) -> np.ndarray:
+        """(n_samples,) host margins with the sample padding stripped —
+        the mesh-agnostic checkpoint image of z."""
+        return np.asarray(z)[:self._s]
+
+    def restore_state(self, w, z=None, active=None, key=None) -> EngineState:
+        """EngineState from UNPADDED host arrays (a `fault.checkpoint`
+        snapshot — possibly written under a different device count or by
+        the local backend). Re-pads to this mesh's n_pad/s_pad and
+        device_puts with the PCDN layout; padded sample rows carry z = 0
+        exactly as the margins program produces for zero-padded X rows,
+        so a restored carry is bit-identical to a recomputed one."""
+        n, s = self._n, self._s
+        wf = np.zeros((self.n_pad,), np.float32)
+        wf[:n] = np.asarray(w, np.float32).reshape(n)
+        w_d = jax.device_put(
+            wf, NamedSharding(self.mesh, P(self.cfg.model_axis)))
+        if active is None:
+            act_d = self._active0
+        else:
+            af = np.zeros((self.n_pad,), bool)
+            af[:n] = np.asarray(active).reshape(n).astype(bool)
+            act_d = jax.device_put(
+                af, NamedSharding(self.mesh, P(self.cfg.model_axis)))
+        if z is None:
+            z_d = self.margins(w_d)
+        else:
+            zf = np.zeros((self.s_pad,), np.float32)
+            zf[:s] = np.asarray(z, np.float32).reshape(s)
+            z_d = jax.device_put(
+                zf, NamedSharding(self.mesh, P(_dspec(self.cfg))))
+        key_d = (jax.random.PRNGKey(self.cfg.seed) if key is None
+                 else jnp.asarray(np.asarray(key), jnp.uint32))
+        return EngineState(w=w_d, z=z_d, key=key_d, active=act_d)

@@ -1,0 +1,30 @@
+"""Fault tolerance subsystem (DESIGN.md section 16).
+
+Crash-safe checkpoint/resume for solves and path sweeps, non-finite
+rollback with automatic P-backoff toward the certified safe bundle size,
+a deterministic fault-injection harness, and the generic step-loop
+runner (promoted from the legacy `repro.train` demo, which now shims
+here).
+"""
+from repro.fault.atomic import (atomic_write_bytes, atomic_write_json,
+                                atomic_write_text, fsync_dir)
+from repro.fault.checkpoint import (CheckpointManager, SolveCheckpointer,
+                                    host_state)
+from repro.fault.inject import (CRASH_KINDS, ENV_VAR, NAN_TARGETS,
+                                FaultPlan, InjectedCrash,
+                                corrupt_checkpoint, plan_from_env,
+                                wrap_outer)
+from repro.fault.resilient import next_bundle_size, resilient_solve
+from repro.fault.runner import (ElasticMeshProvider, FaultTolerantRunner,
+                                RunnerConfig, StepFailure)
+
+__all__ = [
+    "atomic_write_bytes", "atomic_write_json", "atomic_write_text",
+    "fsync_dir",
+    "CheckpointManager", "SolveCheckpointer", "host_state",
+    "CRASH_KINDS", "ENV_VAR", "NAN_TARGETS", "FaultPlan", "InjectedCrash",
+    "corrupt_checkpoint", "plan_from_env", "wrap_outer",
+    "next_bundle_size", "resilient_solve",
+    "ElasticMeshProvider", "FaultTolerantRunner", "RunnerConfig",
+    "StepFailure",
+]

@@ -1,0 +1,71 @@
+"""Crash-safe file writes: tmp + fsync + rename (DESIGN.md section 16.1).
+
+One helper family shared by every durable artifact in the repo — the
+solver/sweep checkpoints (`fault.checkpoint`), the serve model artifacts
+(`serve.artifact.save_model`) and anything else that must never be read
+torn. The contract is the classic POSIX one:
+
+    1. write the full payload to a temp file IN THE SAME DIRECTORY,
+    2. flush + fsync the temp file (data hits the disk, not the page
+       cache),
+    3. os.replace() it over the destination (atomic on POSIX: readers
+       see the old complete file or the new complete file, never bytes
+       of both),
+    4. best-effort fsync the parent directory so the rename itself
+       survives a power cut.
+
+A crash at any step leaves the destination untouched; stale ``.tmp-*``
+siblings are the only debris and are safe to delete.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+
+def fsync_dir(path: str) -> None:
+    """Best-effort fsync of a directory (persists a completed rename).
+    Some filesystems/platforms refuse O_RDONLY dir fsync — that only
+    weakens durability, not atomicity, so failures are swallowed."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def atomic_write_bytes(path: str, data: bytes) -> None:
+    """Write `data` to `path` atomically (tmp + fsync + rename)."""
+    path = os.fspath(path)
+    parent = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=parent, prefix=".tmp-",
+                               suffix=os.path.basename(path))
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            fh.write(data)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    fsync_dir(parent)
+
+
+def atomic_write_text(path: str, text: str) -> None:
+    atomic_write_bytes(path, text.encode("utf-8"))
+
+
+def atomic_write_json(path: str, obj, **dump_kwargs) -> None:
+    """Atomic `json.dump`. Serialization happens BEFORE the temp file is
+    created, so an unserializable object leaves no debris at all."""
+    atomic_write_text(path, json.dumps(obj, **dump_kwargs))

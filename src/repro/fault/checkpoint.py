@@ -1,0 +1,300 @@
+"""Crash-safe, mesh-shape-agnostic checkpointing (DESIGN.md section 16.2).
+
+Layout:  <dir>/step_<N>/
+            manifest.json     — tree structure, shapes, dtypes, step
+            arrays.npz        — one entry per flattened leaf
+            COMMITTED         — written last; a checkpoint without it is
+                                incomplete and ignored on restore
+Leaves are gathered to host (full arrays) so restore can re-shard onto
+any mesh (elastic scaling). Every file is fsynced, the step dir lands
+via atomic rename, and old steps are garbage-collected keeping `keep`
+newest.
+
+Two layers live here:
+
+* `CheckpointManager` — the generic pytree store (promoted from the
+  seed-era `repro.train.checkpoint`, which now re-exports it).
+* `SolveCheckpointer` — the solver/sweep-specific layer the engine and
+  `path.driver.run_path` consume: it snapshots the `EngineState` carry
+  as UNPADDED host arrays (via the backend's `host_weights` /
+  `host_margins`), so a checkpoint written by a sharded solve on one
+  mesh restores onto a different device count — or onto the local
+  backend — via `backend.restore_state`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.fault.atomic import fsync_dir
+
+_SEP = "§"
+
+
+def _flatten_with_names(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path)
+        out.append((name or "leaf", leaf))
+    return out
+
+
+def _fsync_file(path: str) -> None:
+    with open(path, "rb") as fh:
+        os.fsync(fh.fileno())
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        treedef = jax.tree_util.tree_structure(tree)
+        named = _flatten_with_names(tree)
+        arrays = {}
+        for i, (name, leaf) in enumerate(named):
+            arrays[f"{i:05d}{_SEP}{name}"] = np.asarray(
+                jax.device_get(leaf))
+        tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_ckpt_")
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            manifest = {
+                "step": int(step),
+                "treedef": str(treedef),
+                "n_leaves": len(named),
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as fh:
+                json.dump(manifest, fh)
+            # COMMITTED is written (and synced) LAST: its presence means
+            # every other file in the dir already hit the disk
+            _fsync_file(os.path.join(tmp, "arrays.npz"))
+            _fsync_file(os.path.join(tmp, "manifest.json"))
+            with open(os.path.join(tmp, "COMMITTED"), "w") as fh:
+                fh.write("ok")
+                fh.flush()
+                os.fsync(fh.fileno())
+            final = self._step_dir(step)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            fsync_dir(self.directory)
+        except Exception:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+        obs.inc("fault.ckpt_saves")
+        return self._step_dir(step)
+
+    # -- restore --------------------------------------------------------------
+    def steps(self) -> list[int]:
+        """All committed step numbers, ascending."""
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.directory, d, "COMMITTED")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def manifest(self, step: int) -> dict:
+        with open(os.path.join(self._step_dir(step),
+                               "manifest.json")) as fh:
+            return json.load(fh)
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[int, Any]:
+        """`like` provides the tree structure (+ dtypes for casting).
+        `shardings` (optional pytree of NamedSharding) re-shards on load —
+        works across mesh shapes (elastic restart)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in "
+                                    f"{self.directory}")
+        d = self._step_dir(step)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        keys = sorted(data.files, key=lambda s: int(s.split(_SEP)[0]))
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        assert len(keys) == len(leaves_like), \
+            f"leaf count mismatch: {len(keys)} vs {len(leaves_like)}"
+        shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                        if shardings is not None else [None] * len(keys))
+        out = []
+        for key, ref, shd in zip(keys, leaves_like, shard_leaves):
+            arr = data[key]
+            dtype = getattr(ref, "dtype", arr.dtype)
+            a = jax.numpy.asarray(arr, dtype=dtype)
+            if shd is not None:
+                a = jax.device_put(a, shd)
+            out.append(a)
+        return step, jax.tree_util.tree_unflatten(treedef, out)
+
+    def load_raw(self, step: int) -> dict:
+        """The step's leaves as a {name: host array} dict — the natural
+        form for the flat dict trees `SolveCheckpointer` writes."""
+        d = self._step_dir(step)
+        with np.load(os.path.join(d, "arrays.npz")) as data:
+            out = {}
+            for key in data.files:
+                _, name = key.split(_SEP, 1)
+                out[name] = data[key]
+        return out
+
+    def restore_latest_valid_raw(self) -> Optional[Tuple[int, dict, dict]]:
+        """Newest checkpoint that actually LOADS, as (step, raw leaves,
+        manifest extra): a committed step whose arrays were later
+        corrupted (bit rot, torn copy) is skipped with a warning — the
+        same degrade-don't-die posture as the missing-COMMITTED skip.
+        Returns None when nothing restores."""
+        for step in reversed(self.steps()):
+            try:
+                leaves = self.load_raw(step)
+                meta = self.manifest(step).get("extra", {})
+                return step, leaves, meta
+            except Exception as e:  # zip/OSError/KeyError/json errors
+                obs.inc("fault.ckpt_unreadable")
+                print(f"[fault] checkpoint step {step} unreadable "
+                      f"({type(e).__name__}: {e}); trying older one")
+        return None
+
+    # -- internals --------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{int(step):08d}")
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # clean stale tmp dirs from crashed writers
+        for d in os.listdir(self.directory):
+            if d.startswith(".tmp_ckpt_"):
+                shutil.rmtree(os.path.join(self.directory, d),
+                              ignore_errors=True)
+
+
+def host_state(backend, state) -> dict:
+    """The mesh-agnostic host image of an `EngineState`: full UNPADDED
+    arrays, so any backend (any device count) can `restore_state` it."""
+    n = backend.n_features
+    return {
+        "w": backend.host_weights(state.w),
+        "z": backend.host_margins(state.z),
+        "active": np.asarray(state.active)[:n],
+        "key": np.asarray(state.key),
+    }
+
+
+class SolveCheckpointer:
+    """Periodic EngineState snapshots for solves and path sweeps.
+
+    `every` applies to the per-iteration solve callback; the path driver
+    checkpoints at every grid-point boundary (a point is the natural
+    resume unit — resuming mid-point would replay a partial iteration
+    stream and break bit-exact parity with the uninterrupted run).
+    """
+
+    KIND_SOLVE = "solve"
+    KIND_PATH = "path"
+
+    def __init__(self, directory: str, every: int = 10, keep: int = 3):
+        if every < 1:
+            raise ValueError(f"ckpt every must be >= 1, got {every}")
+        self.manager = CheckpointManager(directory, keep=keep)
+        self.every = int(every)
+
+    # -- single solves -------------------------------------------------------
+    def save_solve(self, backend, state, *, outer_iter: int,
+                   extra: Optional[dict] = None) -> str:
+        meta = {"kind": self.KIND_SOLVE, "outer_iter": int(outer_iter),
+                **(extra or {})}
+        return self.manager.save(int(outer_iter), host_state(backend, state),
+                                 extra=meta)
+
+    def restore_solve(self, backend):
+        """-> (EngineState on the backend, meta dict) or None."""
+        got = self._restore(self.KIND_SOLVE)
+        if got is None:
+            return None
+        tree, meta = got
+        return backend.restore_state(**tree), meta
+
+    def latest_meta(self) -> Optional[dict]:
+        step = self.manager.latest_step()
+        if step is None:
+            return None
+        return self.manager.manifest(step).get("extra", {})
+
+    def solve_callback(self, backend, **extra) -> Callable:
+        """The engine `state_callback`: checkpoint every `every`-th
+        finished (finite) iteration."""
+        def cb(k: int, state, f: float, kkt: float) -> None:
+            if (k + 1) % self.every:
+                return
+            self.save_solve(backend, state, outer_iter=k,
+                            extra={"objective": float(f),
+                                   "kkt": float(kkt), **extra})
+        return cb
+
+    # -- path sweeps ---------------------------------------------------------
+    def save_path(self, backend, state, *, point_index: int, cs, c_max,
+                  points, weights, extra: Optional[dict] = None) -> str:
+        tree = {**host_state(backend, state),
+                "weights": np.asarray(weights)}
+        meta = {"kind": self.KIND_PATH, "point_index": int(point_index),
+                "c_max": float(c_max),
+                "cs": [float(c) for c in np.asarray(cs)],
+                "points": [dict(p._asdict()) for p in points],
+                **(extra or {})}
+        return self.manager.save(int(point_index), tree, extra=meta)
+
+    def restore_path(self, backend, *, cs, c_max):
+        """-> (EngineState, meta, weights) or None. Validates the stored
+        c-grid against the live one — a checkpoint from a different
+        dataset/grid must fail loudly, not resume onto wrong points."""
+        got = self._restore(self.KIND_PATH)
+        if got is None:
+            return None
+        tree, meta = got
+        stored = np.asarray(meta["cs"], np.float64)
+        live = np.asarray(cs, np.float64)
+        if stored.shape != live.shape or not np.allclose(
+                stored, live, rtol=1e-9, atol=0.0):
+            raise ValueError(
+                f"checkpoint in {self.manager.directory} was written for "
+                f"a different c-grid ({stored.shape[0]} points, "
+                f"c_max={meta['c_max']:.6g}) than this sweep "
+                f"({live.shape[0]} points, c_max={float(c_max):.6g}); "
+                f"point a fresh --ckpt-dir at this run")
+        weights = tree.pop("weights")
+        state = backend.restore_state(**tree)
+        obs.inc("fault.resumes")
+        return state, meta, np.asarray(weights)
+
+    # -- shared --------------------------------------------------------------
+    def _restore(self, kind: str):
+        got = self.manager.restore_latest_valid_raw()
+        if got is None:
+            return None
+        _step, leaves, meta = got
+        if meta.get("kind") != kind:
+            raise ValueError(
+                f"checkpoint in {self.manager.directory} is a "
+                f"{meta.get('kind')!r} checkpoint, not {kind!r} — solve "
+                f"and path runs need separate --ckpt-dir directories")
+        return leaves, meta

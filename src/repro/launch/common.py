@@ -138,6 +138,45 @@ def add_diag_args(ap: argparse.ArgumentParser):
                          "logs stay clean")
 
 
+def add_fault_args(ap: argparse.ArgumentParser):
+    """Fault-tolerance flags, identical in the solve / path CLIs
+    (README "Robustness"; DESIGN.md section 16)."""
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="crash-safe checkpoint directory (atomic "
+                         "write-then-rename with a COMMITTED marker); "
+                         "solve runs snapshot every --ckpt-every "
+                         "iterations, path sweeps after every grid "
+                         "point; checkpoints are mesh-agnostic host "
+                         "arrays, so a run can resume on a different "
+                         "device count")
+    ap.add_argument("--ckpt-every", type=int, default=10, metavar="N",
+                    help="solve-checkpoint cadence in outer iterations "
+                         "(default 10; path sweeps always checkpoint "
+                         "per point)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest committed checkpoint "
+                         "in --ckpt-dir (incomplete or corrupted steps "
+                         "are skipped); the resumed run reproduces the "
+                         "uninterrupted one bit-for-bit")
+    ap.add_argument("--retries", type=int, default=2, metavar="K",
+                    help="max non-finite rollbacks before the solve "
+                         "surfaces the post-mortem (each retry halves "
+                         "the bundle size toward the certified safe P; "
+                         "DESIGN.md section 16.3)")
+
+
+def make_checkpointer(args, ap: argparse.ArgumentParser):
+    """The `fault.SolveCheckpointer` behind --ckpt-dir, or None."""
+    if getattr(args, "resume", False) and not getattr(args, "ckpt_dir", None):
+        ap.error("--resume needs --ckpt-dir")
+    if not getattr(args, "ckpt_dir", None):
+        return None
+    from repro.fault import SolveCheckpointer
+    if args.ckpt_every < 1:
+        ap.error(f"--ckpt-every must be >= 1, got {args.ckpt_every}")
+    return SolveCheckpointer(args.ckpt_dir, every=args.ckpt_every)
+
+
 def make_progress_callback(args):
     """The engine callback behind `--progress`: one stderr status line,
     rewritten in place (carriage return, no scroll). Returns None when

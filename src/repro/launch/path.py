@@ -75,7 +75,12 @@ def main(argv=None):
                          "servable model (DESIGN.md section 10.1)")
     common.add_obs_args(ap)
     common.add_diag_args(ap)
+    common.add_fault_args(ap)
     args = ap.parse_args(argv)
+    if args.mode == "batch" and (args.ckpt_dir or args.resume):
+        ap.error("--ckpt-dir/--resume require --mode sweep (the lockstep "
+                 "batch engine solves all points at once — there is no "
+                 "point cursor to checkpoint)")
     if args.mode == "batch" and args.shrink:
         ap.error("--shrink requires --mode sweep (the vmapped batch "
                  "engine has no active-set masking)")
@@ -127,9 +132,13 @@ def main(argv=None):
         cfg = PathConfig(solver=solver, n_points=args.points,
                          span=args.span, c_final=args.c_final,
                          warm_start=not args.cold)
+        from repro import fault
         res = run_path(prob, cfg, val_design=Xval, val_y=yval,
                        verbose=True, backend=backend,
-                       callback=common.make_progress_callback(args))
+                       callback=common.make_progress_callback(args),
+                       ckpt=common.make_checkpointer(args, ap),
+                       resume=args.resume,
+                       fault_plan=fault.plan_from_env())
         common.finish_progress(args)
         payload = {"mode": "sweep", "backend": args.backend,
                    **path_summary(res)}

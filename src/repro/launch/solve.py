@@ -19,10 +19,10 @@ import time
 
 import numpy as np
 
-from repro.core import cdn_config, make_problem, scdn, solve, tron
+from repro.core import cdn_config, make_problem, scdn, tron, with_bundle_size
 from repro.core.scdn import SCDNConfig
 from repro.data.synthetic import train_accuracy
-from repro.engine import loop as engine_loop
+from repro.engine import LocalBackend, ShardedBackend
 from repro.launch import common
 from repro.serve import artifact as art
 
@@ -48,9 +48,14 @@ def main(argv=None):
                     help="write just the serve artifact (no history)")
     common.add_obs_args(ap)
     common.add_diag_args(ap)
+    common.add_fault_args(ap)
     args = ap.parse_args(argv)
     if args.sharded:
         args.backend = "sharded"
+    if ((args.ckpt_dir or args.resume)
+            and args.solver not in ("pcdn", "cdn")):
+        ap.error("--ckpt-dir/--resume require --solver pcdn or cdn (the "
+                 "checkpoint image is the bundle solver's EngineState)")
     if args.diag_out and args.solver not in ("pcdn", "cdn"):
         ap.error("--diag-out requires --solver pcdn or cdn (the KKT "
                  "attribution harvest is a bundle-solver output)")
@@ -75,17 +80,34 @@ def main(argv=None):
           f"backend={args.backend}")
     common.setup_obs(args)
     progress = common.make_progress_callback(args)
+    ckpt = common.make_checkpointer(args, ap)
+    from repro import fault
+    plan = fault.plan_from_env()
 
     t0 = time.time()
     if args.backend == "sharded":
-        backend, _ = common.make_backend(args, X, y, c, args.loss)
-        w0 = (common.load_warm_start(args.warm_start, backend.n_features,
-                                     backend.dtype)
+        # pcdn on a mesh: resilient_solve owns the backend (its factory
+        # rebuilds at a damped P_local after a rollback, on the SAME mesh)
+        backend0, _ = common.make_backend(args, X, y, c, args.loss)
+
+        def factory(P):
+            if int(P) == int(args.P):
+                return backend0
+            import dataclasses as _dc
+            cfg = _dc.replace(
+                common.build_sharded_config(args, c, args.loss),
+                P_local=max(int(P) // max(args.model_parallel, 1), 1))
+            return ShardedBackend(X, y, backend0.mesh, cfg,
+                                  layout=args.layout)
+
+        w0 = (common.load_warm_start(args.warm_start, backend0.n_features,
+                                     backend0.dtype)
               if args.warm_start else None)
-        res = engine_loop.solve(backend, c, w0=w0,
-                                max_outer=args.max_outer,
-                                tol_kkt=args.tol, callback=progress)
-        w = backend.host_weights(res.w)
+        res = fault.resilient_solve(
+            factory, c, P=args.P, w0=w0, max_outer=args.max_outer,
+            tol_kkt=args.tol, callback=progress, checkpointer=ckpt,
+            resume=args.resume, max_retries=args.retries, plan=plan)
+        w = res.w                      # resilient_solve returns host w
         f, conv = res.objective, res.converged
         history = common.history_dict(res.history)
     else:
@@ -95,18 +117,27 @@ def main(argv=None):
         w0 = (common.load_warm_start(args.warm_start, prob.n_features,
                                      prob.dtype)
               if args.warm_start else None)
-        if args.solver == "pcdn":
-            res = solve(prob, common.build_pcdn_config(args), w0=w0,
-                        callback=progress)
-        elif args.solver == "cdn":
-            res = solve(prob, cdn_config(max_outer=args.max_outer,
-                                         tol_kkt=args.tol, seed=args.seed,
-                                         shrink=args.shrink,
-                                         use_kernels=args.use_kernels,
-                                         record_aux=common._record_aux(args),
-                                         record_kkt_vec=
-                                         common._record_kkt_vec(args)),
-                        w0=w0, callback=progress)
+        if args.solver in ("pcdn", "cdn"):
+            base_cfg = (common.build_pcdn_config(args)
+                        if args.solver == "pcdn" else
+                        cdn_config(max_outer=args.max_outer,
+                                   tol_kkt=args.tol, seed=args.seed,
+                                   shrink=args.shrink,
+                                   use_kernels=args.use_kernels,
+                                   record_aux=common._record_aux(args),
+                                   record_kkt_vec=
+                                   common._record_kkt_vec(args)))
+
+            def factory(P):
+                return LocalBackend(prob, with_bundle_size(base_cfg, P))
+
+            res = fault.resilient_solve(
+                factory, c, P=base_cfg.P, w0=w0,
+                max_outer=base_cfg.max_outer, tol_kkt=base_cfg.tol_kkt,
+                recheck_every=base_cfg.recheck_every,
+                tol_rel_obj=base_cfg.tol_rel_obj, callback=progress,
+                checkpointer=ckpt, resume=args.resume,
+                max_retries=args.retries, design=prob.design, plan=plan)
         elif args.solver == "scdn":
             res = scdn.solve(prob, SCDNConfig(max_rounds=args.max_outer,
                                               tol_kkt=args.tol,
@@ -123,6 +154,12 @@ def main(argv=None):
     dt = time.time() - t0
     common.finish_progress(args)
 
+    faults = getattr(res, "faults", None)
+    if faults:
+        print(f"[fault] rollbacks={faults['rollbacks']} "
+              f"p_schedule={faults['p_schedule']} "
+              f"p_cert={faults['p_cert']} "
+              f"resumed_from={faults['resumed_from']}")
     print(f"[solve] F={f:.6f} converged={conv} nnz={nnz} time={dt:.1f}s")
     if Xte is not None:
         acc = train_accuracy(Xte, yte, np.asarray(w))

@@ -91,7 +91,9 @@ def pick_best(points: Sequence[PathPoint]) -> Optional[int]:
 def run_path(problem: Optional[L1Problem], cfg: PathConfig,
              val_design=None, val_y=None,
              verbose: bool = False, outer=None,
-             backend=None, callback=None) -> PathResult:
+             backend=None, callback=None,
+             ckpt=None, resume: bool = False,
+             fault_plan=None) -> PathResult:
     """Sweep the c-grid; `problem.c` is a template value and is ignored.
 
     backend: any engine execution backend; defaults to a `LocalBackend`
@@ -106,6 +108,16 @@ def run_path(problem: Optional[L1Problem], cfg: PathConfig,
     time.
     callback: forwarded to every point's engine loop (the `--progress`
     live status — signature (k, w, f, kkt, mean_q)).
+    ckpt: optional `fault.SolveCheckpointer` — the finished carry, the
+    per-point records and the weight rows are checkpointed after EVERY
+    grid point (the point boundary is the natural resume unit; see the
+    checkpointer docstring). resume=True restarts from the newest
+    committed point checkpoint — the restored carry is the same host
+    image the uninterrupted run had, so the resumed sweep's artifacts
+    match bit-for-bit. The stored c-grid is validated against the live
+    one. fault_plan: optional `fault.FaultPlan`; its iteration hooks
+    count cumulative outer iterations across the sweep and
+    `crash_at_point` fires right AFTER a point's checkpoint commits.
     """
     if (val_design is None) != (val_y is None):
         raise ValueError("pass both val_design and val_y or neither")
@@ -125,8 +137,24 @@ def run_path(problem: Optional[L1Problem], cfg: PathConfig,
     points: list[PathPoint] = []
     res = None
     weights = np.zeros((len(cs), n), np.dtype(backend.dtype))
+    i_start = 0
+    if resume and ckpt is not None:
+        got = ckpt.restore_path(backend, cs=cs, c_max=c_max)
+        if got is not None:
+            state, meta, saved_w = got
+            i_start = int(meta["point_index"]) + 1
+            points = [PathPoint(**p) for p in meta["points"]]
+            weights[:i_start] = saved_w[:i_start]
+            if verbose:
+                print(f"[fault] resuming path sweep at point "
+                      f"{i_start}/{len(cs)}", flush=True)
+    outer_fn = backend.outer
+    if fault_plan is not None:
+        from repro.fault import inject as fault_inject
+        outer_fn = fault_inject.wrap_outer(backend.outer, fault_plan)
     t_total0 = time.perf_counter()
-    for i, c in enumerate(cs):
+    for i in range(i_start, len(cs)):
+        c = cs[i]
         t0_ns = time.perf_counter_ns()
         t0 = time.perf_counter()
         if not cfg.warm_start:
@@ -136,7 +164,7 @@ def run_path(problem: Optional[L1Problem], cfg: PathConfig,
             # f32 z-drift from accumulating across the whole sweep
             state = state._replace(z=backend.margins(state.w))
         state, res = engine_loop.run_outer_loop(
-            backend.outer, state, float(c),
+            outer_fn, state, float(c),
             max_outer=solver.max_outer, tol_kkt=solver.tol_kkt,
             recheck_every=solver.recheck_every,
             tol_rel_obj=solver.tol_rel_obj, callback=callback)
@@ -161,6 +189,11 @@ def run_path(problem: Optional[L1Problem], cfg: PathConfig,
             print(f"[path] c={p.c:.5g} F={p.objective:.5f} nnz={p.nnz} "
                   f"kkt={p.kkt:.2e} iters={p.n_outer} "
                   f"t={p.seconds:.2f}s{extra}", flush=True)
+        if ckpt is not None:
+            ckpt.save_path(backend, state, point_index=i, cs=cs,
+                           c_max=c_max, points=points, weights=weights)
+        if fault_plan is not None:
+            fault_plan.fire_point(i)
 
     return PathResult(c_max=c_max, cs=cs, points=points, weights=weights,
                       best_index=pick_best(points),

@@ -27,6 +27,8 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.fault.atomic import atomic_write_json
+
 SCHEMA = "repro.serve/model@1"
 
 
@@ -203,6 +205,11 @@ def save_model(path: str, family, extra: Optional[dict] = None) -> dict:
     how `launch.solve --out` keeps its history / timing fields next to
     the artifact ones. Reserved artifact keys cannot be overridden.
     Returns the payload written.
+
+    The write is atomic (tmp file + fsync + rename — `fault.atomic`):
+    a hot-swap watcher polling this path can never observe a torn,
+    half-written artifact, and a crash mid-save leaves any previous
+    artifact intact.
     """
     if isinstance(family, ModelArtifact):
         family = ModelFamily(kind="binary", models=(family,))
@@ -224,8 +231,7 @@ def save_model(path: str, family, extra: Optional[dict] = None) -> dict:
     })
     if family.kind == "ovr":
         payload["classes"] = [m.label for m in family.models]
-    with open(path, "w") as fh:
-        json.dump(payload, fh, indent=1, default=float)
+    atomic_write_json(path, payload, indent=1, default=float)
     return payload
 
 

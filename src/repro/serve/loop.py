@@ -77,6 +77,11 @@ class ServeOverload(RuntimeError):
     """Admission control refused the request: the queue is full."""
 
 
+class SlotQuarantined(RuntimeError):
+    """The model slot was quarantined after repeated batch failures;
+    submits are refused until a hot-swap installs a fresh model."""
+
+
 class SwapCapacityError(ValueError):
     """The incoming model does not fit the slot's fixed capacity shapes."""
 
@@ -182,6 +187,11 @@ class _ModelSlot:
         self.pad_rows = 0
         self.flushes = {"full": 0, "deadline": 0, "drain": 0}
         self.slo_violations = 0
+        # batch-failure resilience (DESIGN.md section 16.6)
+        self.retries = 0               # in-place batch retries that ran
+        self.failed_batches = 0        # batches failed after the retry
+        self.consecutive_failures = 0  # reset on success and on install
+        self.quarantined = False
         self.e2e = obs.Histogram(obs.LATENCY_BOUNDS_S)
         self.compute: Dict[int, obs.Histogram] = {}
 
@@ -192,6 +202,10 @@ class _ModelSlot:
             "queue_depth": len(self.pending),
             "flushes": dict(self.flushes),
             "slo_violations": self.slo_violations,
+            "retries": self.retries,
+            "failed_batches": self.failed_batches,
+            "consecutive_failures": self.consecutive_failures,
+            "quarantined": self.quarantined,
             "routes": {str(b): r for b, r in sorted(self.routes.items())},
             "e2e_p50_s": self.e2e.quantile(0.5),
             "e2e_p99_s": self.e2e.quantile(0.99),
@@ -230,9 +244,26 @@ class ServeLoop:
                  safety_factor: float = 1.2, safety_s: float = 1e-3,
                  max_queue: Optional[int] = None, route: str = "sparse",
                  use_kernels: bool = False, capacity_factor: float = 2.0,
-                 dtype=np.float32):
+                 dtype=np.float32, batch_retries: int = 1,
+                 quarantine_after: Optional[int] = 3):
+        """batch_retries: bounded in-place retries of a failed batch
+        compute before its futures are failed (a transient device error
+        should not surface to callers). quarantine_after: after this
+        many CONSECUTIVE failed batches the slot is quarantined —
+        further submits raise `SlotQuarantined` instead of feeding a
+        model that cannot score; a hot-swap install clears it. None
+        disables quarantine."""
         if route not in ("sparse", "dense", "auto"):
             raise ValueError(f"unknown route {route!r}")
+        if batch_retries < 0:
+            raise ValueError(f"batch_retries must be >= 0, "
+                             f"got {batch_retries}")
+        if quarantine_after is not None and quarantine_after < 1:
+            raise ValueError(f"quarantine_after must be >= 1 or None, "
+                             f"got {quarantine_after}")
+        self.batch_retries = int(batch_retries)
+        self.quarantine_after = (None if quarantine_after is None
+                                 else int(quarantine_after))
         self.policy = BucketPolicy(
             buckets=tuple(buckets or default_buckets(max_batch)),
             layout="dense")
@@ -377,6 +408,12 @@ class ServeLoop:
         with self._work:
             if self._stop:
                 raise RuntimeError("ServeLoop is stopped")
+            if slot.quarantined:
+                raise SlotQuarantined(
+                    f"model {name!r} is quarantined after "
+                    f"{slot.consecutive_failures} consecutive batch "
+                    f"failures; hot-swap a fresh model (swap()) to "
+                    f"restore it")
             if self.max_queue is not None and self._depth >= self.max_queue:
                 self._rejects += 1
                 if obs.metrics_enabled():
@@ -531,19 +568,47 @@ class ServeLoop:
         bucket = self.policy.bucket_for(len(reqs))
         t0_ns = time.perf_counter_ns()
         t0 = time.perf_counter()
-        try:
-            X = self.policy.pad_dense(np.stack([p.x for p in reqs]), bucket)
-            z = np.asarray(margins_dense(bank, X,
-                                         use_kernels=self.use_kernels,
-                                         route=slot.routes[bucket]))
-        except Exception as e:                  # serve on: fail the batch
+        z = err = None
+        for attempt in range(1 + self.batch_retries):
+            try:
+                X = self.policy.pad_dense(np.stack([p.x for p in reqs]),
+                                          bucket)
+                z = np.asarray(margins_dense(bank, X,
+                                             use_kernels=self.use_kernels,
+                                             route=slot.routes[bucket]))
+                err = None
+                break
+            except Exception as e:      # bounded in-place retry first
+                err = e
+                if attempt < self.batch_retries:
+                    with self._lock:
+                        slot.retries += 1
+                    if obs.metrics_enabled():
+                        obs.inc("serve.batch_retries")
+        if err is not None:                     # serve on: fail the batch
             with self._lock:
                 self._errors += len(reqs)
+                slot.failed_batches += 1
+                slot.consecutive_failures += 1
+                if (self.quarantine_after is not None
+                        and slot.consecutive_failures
+                        >= self.quarantine_after
+                        and not slot.quarantined):
+                    slot.quarantined = True
+                    if obs.metrics_enabled():
+                        obs.inc("serve.loop.quarantines")
+                    obs.instant("serve.quarantine", "serve",
+                                args={"model": slot.name,
+                                      "failures":
+                                      slot.consecutive_failures})
             if obs.metrics_enabled():
                 obs.inc("serve.loop.errors", len(reqs))
+                obs.inc("serve.batch_failures")
             for p in reqs:
-                p.future._set_error(e)
+                p.future._set_error(err)
             return
+        with self._lock:
+            slot.consecutive_failures = 0
         t_done = time.perf_counter()
         dt = t_done - t0
         with self._lock:
@@ -594,6 +659,9 @@ class ServeLoop:
             slot.bank = self._rebind(new_bank, arrs)
             slot.version += 1
             slot.installs += 1
+            # a fresh model clears the failure streak and any quarantine
+            slot.consecutive_failures = 0
+            slot.quarantined = False
             ticket.version = slot.version
             if obs.metrics_enabled():
                 obs.inc("serve.loop.installs")

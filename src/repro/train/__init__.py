@@ -1,8 +1,10 @@
-"""Training/serving substrate: step factories, checkpointing, fault
-tolerance, elastic scaling."""
+"""Training/serving substrate: step factories plus re-exports of the
+checkpoint/runner machinery that now lives in `repro.fault` (the
+`train.checkpoint` / `train.fault_tolerance` modules are deprecation
+shims)."""
 from repro.train.steps import make_serve_step, make_train_step
-from repro.train.checkpoint import CheckpointManager
-from repro.train.fault_tolerance import FaultTolerantRunner
+from repro.fault.checkpoint import CheckpointManager
+from repro.fault.runner import FaultTolerantRunner
 
 __all__ = ["make_train_step", "make_serve_step", "CheckpointManager",
            "FaultTolerantRunner"]

@@ -1,126 +1,19 @@
-"""Sharded, atomic, mesh-shape-agnostic checkpointing (no orbax offline).
+"""Deprecated location — the checkpoint machinery was promoted to
+`repro.fault.checkpoint` (DESIGN.md section 16.2), where it backs the
+solver/sweep checkpoint-resume path as well as the train demo.
 
-Layout:  <dir>/step_<N>/
-            manifest.json     — tree structure, shapes, dtypes, step
-            arrays.npz        — one entry per flattened leaf
-            COMMITTED         — written last; a checkpoint without it is
-                                incomplete and ignored on restore
-Leaves are gathered to host (full arrays) so restore can re-shard onto any
-mesh (elastic scaling). Writes go to a tmp dir + atomic rename; old steps
-are garbage-collected keeping `keep` newest.
+This shim re-exports the public names and will be removed; import from
+`repro.fault` instead.
 """
 from __future__ import annotations
 
-import json
-import os
-import shutil
-import tempfile
-from typing import Any, Optional, Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.fault.checkpoint import CheckpointManager, _SEP  # noqa: F401
 
-_SEP = "§"
+warnings.warn(
+    "repro.train.checkpoint is deprecated; use repro.fault.checkpoint "
+    "(promoted in the fault-tolerance subsystem)",
+    DeprecationWarning, stacklevel=2)
 
-
-def _flatten_with_names(tree) -> list[tuple[str, Any]]:
-    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    out = []
-    for path, leaf in flat:
-        name = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
-                         for p in path)
-        out.append((name or "leaf", leaf))
-    return out
-
-
-class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
-        self.directory = directory
-        self.keep = keep
-        os.makedirs(directory, exist_ok=True)
-
-    # -- save ---------------------------------------------------------------
-    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
-        treedef = jax.tree_util.tree_structure(tree)
-        named = _flatten_with_names(tree)
-        arrays = {}
-        for i, (name, leaf) in enumerate(named):
-            arrays[f"{i:05d}{_SEP}{name}"] = np.asarray(
-                jax.device_get(leaf))
-        tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_ckpt_")
-        try:
-            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-            manifest = {
-                "step": int(step),
-                "treedef": str(treedef),
-                "n_leaves": len(named),
-                "extra": extra or {},
-            }
-            with open(os.path.join(tmp, "manifest.json"), "w") as fh:
-                json.dump(manifest, fh)
-            with open(os.path.join(tmp, "COMMITTED"), "w") as fh:
-                fh.write("ok")
-            final = self._step_dir(step)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-        except Exception:
-            shutil.rmtree(tmp, ignore_errors=True)
-            raise
-        self._gc()
-        return self._step_dir(step)
-
-    # -- restore --------------------------------------------------------------
-    def latest_step(self) -> Optional[int]:
-        steps = []
-        for d in os.listdir(self.directory):
-            if d.startswith("step_") and os.path.exists(
-                    os.path.join(self.directory, d, "COMMITTED")):
-                steps.append(int(d.split("_")[1]))
-        return max(steps) if steps else None
-
-    def restore(self, like: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Tuple[int, Any]:
-        """`like` provides the tree structure (+ dtypes for casting).
-        `shardings` (optional pytree of NamedSharding) re-shards on load —
-        works across mesh shapes (elastic restart)."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in "
-                                    f"{self.directory}")
-        d = self._step_dir(step)
-        data = np.load(os.path.join(d, "arrays.npz"))
-        keys = sorted(data.files, key=lambda s: int(s.split(_SEP)[0]))
-        leaves_like, treedef = jax.tree_util.tree_flatten(like)
-        assert len(keys) == len(leaves_like), \
-            f"leaf count mismatch: {len(keys)} vs {len(leaves_like)}"
-        shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
-                        if shardings is not None else [None] * len(keys))
-        out = []
-        for key, ref, shd in zip(keys, leaves_like, shard_leaves):
-            arr = data[key]
-            dtype = getattr(ref, "dtype", arr.dtype)
-            a = jnp.asarray(arr, dtype=dtype)
-            if shd is not None:
-                a = jax.device_put(a, shd)
-            out.append(a)
-        return step, jax.tree_util.tree_unflatten(treedef, out)
-
-    # -- internals --------------------------------------------------------------
-    def _step_dir(self, step: int) -> str:
-        return os.path.join(self.directory, f"step_{int(step):08d}")
-
-    def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.directory)
-            if d.startswith("step_") and os.path.exists(
-                os.path.join(self.directory, d, "COMMITTED")))
-        for s in steps[:-self.keep]:
-            shutil.rmtree(self._step_dir(s), ignore_errors=True)
-        # clean stale tmp dirs from crashed writers
-        for d in os.listdir(self.directory):
-            if d.startswith(".tmp_ckpt_"):
-                shutil.rmtree(os.path.join(self.directory, d),
-                              ignore_errors=True)
+__all__ = ["CheckpointManager"]

@@ -1,14 +1,17 @@
-"""Checkpoint manager + fault-tolerant runner tests."""
+"""Checkpoint manager + fault-tolerant runner tests (now living in
+`repro.fault`; the deprecated `repro.train.*` shim paths are pinned at
+the bottom)."""
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.train.checkpoint import CheckpointManager
-from repro.train.fault_tolerance import (FaultTolerantRunner, RunnerConfig,
-                                         StepFailure)
+from repro.fault.checkpoint import CheckpointManager
+from repro.fault.runner import (FaultTolerantRunner, RunnerConfig,
+                                StepFailure)
 
 
 def tree_eq(a, b):
@@ -146,3 +149,25 @@ def test_runner_gives_up_after_retries(tmp_path):
                             RunnerConfig(max_retries_per_step=2))
     with pytest.raises(StepFailure):
         r.run(1)
+
+
+# -- deprecated shim paths ----------------------------------------------------
+
+def test_train_shims_warn_and_reexport():
+    """The old `repro.train.checkpoint` / `.fault_tolerance` module paths
+    still import (with a DeprecationWarning) and expose the same objects
+    `repro.fault` does."""
+    import importlib
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        tc = importlib.import_module("repro.train.checkpoint")
+        tf = importlib.import_module("repro.train.fault_tolerance")
+        importlib.reload(tc)
+        importlib.reload(tf)
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+    assert tc.CheckpointManager is CheckpointManager
+    assert tf.FaultTolerantRunner is FaultTolerantRunner
+    # the package-level names point at the promoted implementations too
+    import repro.train as train
+    assert train.CheckpointManager is CheckpointManager
+    assert train.FaultTolerantRunner is FaultTolerantRunner

@@ -368,3 +368,121 @@ def test_bench_serve_commits_route_crossover_table():
     # at extreme sparsity the union-gather route must win somewhere
     assert any(r["sparsity"] >= 0.999 and r["min_batch_sparse"] is not None
                for r in table)
+
+
+# -- batch-failure resilience (DESIGN.md section 16.6) -------------------------
+
+def test_batch_retry_recovers_transient_failure(monkeypatch):
+    """One transient scorer failure is retried in place: the caller's
+    future resolves normally and only the retry counter moves."""
+    import repro.serve.loop as loop_mod
+    fam = _binary_family(32, 5, seed=3)
+    real = margins_dense
+    boom = {"left": 1}
+
+    def flaky(bank, X, **kw):
+        if boom["left"]:
+            boom["left"] -= 1
+            raise RuntimeError("transient device loss")
+        return real(bank, X, **kw)
+
+    with ServeLoop(fam, buckets=(1,), default_budget_s=0.05,
+                   batch_retries=2) as loop:
+        x = RNG.standard_normal(32).astype(np.float32)
+        monkeypatch.setattr(loop_mod, "margins_dense", flaky)
+        r = loop.submit(x).result(timeout=30)
+        np.testing.assert_allclose(
+            r.margins, np.asarray(real(loop.bank(), x[None, :]))[0],
+            rtol=1e-5, atol=1e-5)
+        st = loop.stats()["models"]["default"]
+        assert st["retries"] == 1
+        assert st["failed_batches"] == 0
+        assert st["consecutive_failures"] == 0
+        assert not st["quarantined"]
+        assert loop.stats()["errors"] == 0
+
+
+def test_quarantine_after_consecutive_failures_and_swap_clears(monkeypatch):
+    """Retries exhausted N batches in a row -> the slot quarantines
+    (clear error on submit, the loop itself keeps serving) and a
+    hot-swap install clears it."""
+    import repro.serve.loop as loop_mod
+    fam = _binary_family(32, 5, seed=4)
+    real = margins_dense
+
+    def broken(bank, X, **kw):
+        raise RuntimeError("wedged scorer")
+
+    with ServeLoop(fam, buckets=(1,), default_budget_s=0.05,
+                   batch_retries=0, quarantine_after=2) as loop:
+        x = RNG.standard_normal(32).astype(np.float32)
+        monkeypatch.setattr(loop_mod, "margins_dense", broken)
+        for _ in range(2):                      # two one-request batches
+            with pytest.raises(RuntimeError, match="wedged"):
+                loop.submit(x).result(timeout=30)
+        st = loop.stats()["models"]["default"]
+        assert st["failed_batches"] == 2
+        assert st["consecutive_failures"] == 2
+        assert st["quarantined"]
+        from repro.serve.loop import SlotQuarantined
+        with pytest.raises(SlotQuarantined, match="quarantined after 2"):
+            loop.submit(x)
+        # the model is sick, not the loop: install a replacement...
+        monkeypatch.setattr(loop_mod, "margins_dense", real)
+        ticket = loop.swap(model=_binary_family(32, 7, seed=5))
+        assert ticket.installed.wait(timeout=30)
+        # ...and the slot serves again
+        r = loop.submit(x).result(timeout=30)
+        st = loop.stats()["models"]["default"]
+        assert not st["quarantined"]
+        assert st["consecutive_failures"] == 0
+        assert r.version == 2
+
+
+def test_failure_streak_resets_on_success(monkeypatch):
+    import repro.serve.loop as loop_mod
+    fam = _binary_family(24, 4, seed=6)
+    real = margins_dense
+    fail_next = {"on": True}
+
+    def sometimes(bank, X, **kw):
+        if fail_next["on"]:
+            raise RuntimeError("blip")
+        return real(bank, X, **kw)
+
+    with ServeLoop(fam, buckets=(1,), default_budget_s=0.05,
+                   batch_retries=0, quarantine_after=2) as loop:
+        x = RNG.standard_normal(24).astype(np.float32)
+        monkeypatch.setattr(loop_mod, "margins_dense", sometimes)
+        with pytest.raises(RuntimeError):
+            loop.submit(x).result(timeout=30)
+        fail_next["on"] = False
+        loop.submit(x).result(timeout=30)       # success resets the streak
+        fail_next["on"] = True
+        with pytest.raises(RuntimeError):
+            loop.submit(x).result(timeout=30)
+        st = loop.stats()["models"]["default"]
+        assert st["failed_batches"] == 2        # total failures kept
+        assert st["consecutive_failures"] == 1  # but the STREAK reset
+        assert not st["quarantined"]
+
+
+def test_quarantine_disabled_and_param_validation(monkeypatch):
+    import repro.serve.loop as loop_mod
+    fam = _binary_family(16, 3, seed=8)
+
+    def broken(bank, X, **kw):
+        raise RuntimeError("always down")
+
+    with ServeLoop(fam, buckets=(1,), default_budget_s=0.05,
+                   batch_retries=0, quarantine_after=None) as loop:
+        x = RNG.standard_normal(16).astype(np.float32)
+        monkeypatch.setattr(loop_mod, "margins_dense", broken)
+        for _ in range(4):                      # never quarantines
+            with pytest.raises(RuntimeError):
+                loop.submit(x).result(timeout=30)
+        assert not loop.stats()["models"]["default"]["quarantined"]
+    with pytest.raises(ValueError, match="batch_retries"):
+        ServeLoop(fam, buckets=(1,), batch_retries=-1)
+    with pytest.raises(ValueError, match="quarantine_after"):
+        ServeLoop(fam, buckets=(1,), quarantine_after=0)
